@@ -1,0 +1,69 @@
+"""Generate EXPERIMENTS.md tables from results/dryrun JSONs."""
+import glob, json, os, sys
+
+
+def fmt(v, n=3):
+    return f"{v:.{n}e}" if isinstance(v, float) else str(v)
+
+
+def roofline_table(d="results/dryrun", mesh="pod1"):
+    lines = [
+        "| arch | shape | tc (s) | tm (s) | tcoll (s) | dominant | "
+        "roofline frac | useful FLOPs | args GB/dev | temp GB/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for p in sorted(glob.glob(os.path.join(d, f"*_{mesh}.json"))):
+        r = json.load(open(p))
+        arch, shape = r["arch"], r["shape"]
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {arch} | {shape} | — | — | — | — | — | — | — | — | "
+                f"skipped: full-attention @524k (DESIGN §6) |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | ERROR {r['error'][:60]} |")
+            continue
+        t = r["roofline"]
+        frac = t["t_compute"] / t["t_bound"] if t["t_bound"] else 0
+        uf = r.get("useful_flop_ratio")
+        mem = r.get("memory", {})
+        lines.append(
+            f"| {arch} | {shape} | {t['t_compute']:.2e} | {t['t_memory']:.2e}"
+            f" | {t['t_collective']:.2e} | **{t['dominant']}** | {frac:.3f} |"
+            f" {uf:.2f} |"
+            f" {mem.get('argument_size_in_bytes', 0) / 1e9:.1f} |"
+            f" {mem.get('temp_size_in_bytes', 0) / 1e9:.1f} | |"
+        )
+    return "\n".join(lines)
+
+
+def compile_table(d="results/dryrun"):
+    lines = [
+        "| arch | shape | 16x16 compile (s) | 2x16x16 compile (s) | status |",
+        "|---|---|---|---|---|",
+    ]
+    seen = {}
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(p))
+        key = (r["arch"], r["shape"])
+        mesh = "pod2" if p.endswith("_pod2.json") else "pod1"
+        seen.setdefault(key, {})[mesh] = r
+    for (arch, shape), rs in sorted(seen.items()):
+        p1, p2 = rs.get("pod1"), rs.get("pod2")
+        if p1 and p1["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | skipped (long-ctx rule) |")
+            continue
+        c1 = f"{p1['compile_s']:.1f}" if p1 and p1["status"] == "ok" else "?"
+        c2 = f"{p2['compile_s']:.1f}" if p2 and p2["status"] == "ok" else "?"
+        ok = "ok" if (p1 and p1["status"] == "ok") and (
+            p2 and p2["status"] == "ok") else "partial"
+        lines.append(f"| {arch} | {shape} | {c1} | {c2} | {ok} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    if which == "roofline":
+        print(roofline_table())
+    else:
+        print(compile_table())

@@ -1,0 +1,45 @@
+"""Roofline table from results/dryrun/*.json (deliverable g).
+
+Reads the dry-run artifacts and prints, per (arch x shape x mesh):
+compute/memory/collective terms, dominant bottleneck, MODEL_FLOPS
+ratio, and per-device memory. Used to build EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(results_dir: str = "results/dryrun") -> None:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        tag = os.path.basename(path)[:-5]
+        if r["status"] == "skipped":
+            emit(f"roofline/{tag}", 0.0, f"SKIPPED:{r['reason'][:60]}")
+            continue
+        if r["status"] != "ok":
+            emit(f"roofline/{tag}", 0.0, f"ERROR:{r['error'][:80]}")
+            continue
+        t = r["roofline"]
+        mem_gb = r["memory"].get("argument_size_in_bytes", 0) / 1e9
+        tmp_gb = r["memory"].get("temp_size_in_bytes", 0) / 1e9
+        ratio = r.get("useful_flop_ratio")
+        frac = (t["t_compute"] / t["t_bound"]) if t["t_bound"] else 0.0
+        emit(
+            f"roofline/{tag}", 0.0,
+            f"tc={t['t_compute']:.3e};tm={t['t_memory']:.3e};"
+            f"tcoll={t['t_collective']:.3e};dom={t['dominant']};"
+            f"roofline_frac={frac:.3f};"
+            f"useful_flops={ratio if ratio is None else round(ratio, 3)};"
+            f"args_gb={mem_gb:.1f};temp_gb={tmp_gb:.1f}",
+        )
+        rows.append((tag, t, frac))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Benchmark harness entrypoint: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig17] [--skip-roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--roofline-dir", default="results/dryrun_final")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig4_redundant_ops, fig14_app_time, fig16_layerwise,
+        fig17_sparsity_scaling, fig18_operand_order, moe_structural,
+        roofline_report, serve_cache_skip,
+    )
+
+    suites = [
+        ("fig4", fig4_redundant_ops.run),
+        ("fig14", fig14_app_time.run),
+        ("fig16", fig16_layerwise.run),
+        ("fig17", fig17_sparsity_scaling.run),
+        ("fig18", fig18_operand_order.run),
+        ("moe", moe_structural.run),
+        ("serve_skip", serve_cache_skip.run),
+    ]
+    if not args.skip_roofline:
+        import functools
+        import os
+        rdir = args.roofline_dir
+        if not os.path.isdir(rdir):
+            rdir = "results/dryrun"
+        suites.append(
+            ("roofline", functools.partial(roofline_report.run, rdir)))
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed += 1
+            sys.stderr.write(f"[{name}] FAILED\n{traceback.format_exc()}\n")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serving example (deliverable b): batched requests through the
+prefill + decode server, including the audio (musicgen codebook) path.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_launch
+
+print("== text LM serving (smollm-135m reduced) ==")
+serve_launch.main([
+    "--arch", "smollm-135m", "--reduced",
+    "--requests", "6", "--prompt-len", "8", "--max-new", "8",
+    "--batch-slots", "4",
+])
+
+print("\n== audio (EnCodec codebooks, musicgen reduced) ==")
+serve_launch.main([
+    "--arch", "musicgen-large", "--reduced",
+    "--requests", "2", "--prompt-len", "4", "--max-new", "4",
+    "--batch-slots", "2", "--max-len", "64",
+])
+print("serve_lm OK")

@@ -1,0 +1,2 @@
+"""repro: SparCE (sparsity-aware tile skipping) on TPU in JAX, at pod scale."""
+__version__ = "1.0.0"

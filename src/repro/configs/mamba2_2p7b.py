@@ -1,0 +1,16 @@
+"""mamba2-2.7b [ssm]: 64L d_model=2560, attn-free, vocab=50280,
+ssm_state=128 -- SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=256),
+    tie_embeddings=True,
+)

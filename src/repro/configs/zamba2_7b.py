@@ -1,0 +1,20 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64 -- Mamba2 + shared attn blocks [arXiv:2411.15242].
+
+The single attention+MLP block's weights are shared across all its
+applications (every 6th layer); per-application LoRA deltas from the
+paper are omitted (noted in DESIGN.md)."""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    attn_every=6,
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=256),
+)

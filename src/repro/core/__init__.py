@@ -1,0 +1,10 @@
+"""SparCE core: the paper's contribution as composable JAX modules.
+
+  sprf        -- tile bitmaps (Sparsity Register File analogue)
+  sasa        -- static skip-plan analysis (SASA table analogue)
+  sparse_ops  -- gated matmul + fused relu/bitmap with error-sparse VJP
+  cost_model  -- GPP (paper-faithful) and TPU execution-time models
+"""
+from repro.core.sprf import TileBitmap, compute_bitmap, weight_bitmap, prune_weights, random_sparse  # noqa: F401
+from repro.core.sasa import SkipPlan, plan_matmul, analyze_network, LayerSpec, expected_block_sparsity  # noqa: F401
+from repro.core.sparse_ops import SparsityConfig, sparce_matmul, relu_with_bitmap, relu2_with_bitmap  # noqa: F401

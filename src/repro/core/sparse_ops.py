@@ -1,0 +1,182 @@
+"""High-level SparCE ops used by the model layers.
+
+``sparce_matmul`` is the first-class integration point of the paper's
+technique: a matmul whose forward pass drops all-zero tiles of the sparse
+operand (features / pruned weights) and whose *backward* pass gates the
+BP and WG GEMMs on error sparsity -- the paper's training-time story
+(Section 2.2.2: error sparsity from ReLU-backward; Section 6.1: BP gains
+exceed FP gains because errors are sparser than features).
+
+Modes:
+  * 'kernel'    -- Pallas kernels (interpret=True on this CPU container;
+                   the deployment flag flips to compiled TPU kernels).
+  * 'reference' -- masked-dense jnp ops with identical semantics. This is
+                   what the distributed model stacks use so that pjit/XLA
+                   sees plain einsums (and the dry-run lowers collectives
+                   cleanly); tile-skip *accounting* still happens.
+  * 'off'       -- plain dense matmul (the baseline the paper compares to).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sasa, sprf
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """First-class framework config for the paper's technique."""
+
+    enabled: bool = False
+    mode: str = "reference"  # 'kernel' | 'reference' | 'off'
+    block_m: int = 64
+    block_k: int = 128
+    block_n: int = 128
+    gate_activations: bool = True  # dynamic feature sparsity (FP)
+    gate_errors: bool = True  # dynamic error sparsity (BP/WG)
+    gate_weights: bool = False  # static pruned-weight sparsity
+    weight_sparsity: float = 0.0  # pruning level applied at init when >0
+    relufication: bool = False  # swap smooth MLP act for relu^2
+    interpret: bool = True  # Pallas interpret mode (CPU container)
+
+    def block(self) -> Tuple[int, int]:
+        return (self.block_m, self.block_k)
+
+
+def _run_matmul(
+    x, w, lbits, rbits, plan: sasa.SkipPlan, mode: str, interpret: bool,
+    out_dtype,
+):
+    if mode == "off" or plan.gate == "none":
+        return jnp.dot(
+            x.astype(jnp.float32), w.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ).astype(out_dtype)
+    if mode == "kernel":
+        lb = sprf.TileBitmap(lbits, plan.block_lhs, x.shape) if lbits is not None else None
+        rb = sprf.TileBitmap(rbits, plan.block_rhs, w.shape) if rbits is not None else None
+        return kops.sparce_gemm(
+            x, w, plan, lhs_bitmap=lb, rhs_bitmap=rb,
+            out_dtype=out_dtype, interpret=interpret,
+        )
+    # reference: masked dense (bit-exact with the kernel contract)
+    return kref.sparce_gemm_ref(
+        x, w,
+        bits_lhs=lbits if plan.gate in ("lhs", "both") else None,
+        bits_rhs=rbits if plan.gate in ("rhs", "both") else None,
+        block_m=plan.block_m, block_k=plan.block_k, block_n=plan.block_n,
+        out_dtype=out_dtype,
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _sparce_matmul(x, w, lbits, rbits, plan, mode, interpret):
+    return _run_matmul(x, w, lbits, rbits, plan, mode, interpret, x.dtype)
+
+
+def _fwd(x, w, lbits, rbits, plan, mode, interpret):
+    y = _run_matmul(x, w, lbits, rbits, plan, mode, interpret, x.dtype)
+    return y, (x, w, lbits, rbits)
+
+
+def _bwd(plan, mode, interpret, res, g):
+    x, w, lbits, rbits = res
+    m, k = x.shape
+    _, n = w.shape
+    # --- BP: dx = g @ w^T, gated on ERROR sparsity (bitmap of g). ---
+    # The paper: errors are sparser than features => BP gains exceed FP.
+    gbits = None
+    bwd_gate = "none"
+    if mode != "off" and plan.gate in ("lhs", "both"):
+        gbits = sprf.compute_bitmap(g, (plan.block_m, plan.block_n)).bits
+        bwd_gate = "lhs"
+    dx_plan = sasa.SkipPlan(
+        gate=bwd_gate, variant="gated" if bwd_gate != "none" else "dense",
+        block_m=plan.block_m, block_k=plan.block_n, block_n=plan.block_k,
+    )
+    dx = _run_matmul(
+        g, w.T, gbits, None, dx_plan, mode, interpret, x.dtype
+    )
+    # --- WG: dw = x^T @ g, gated on the FEATURE bitmap (transposed). ---
+    wg_gate = "none"
+    xtbits = None
+    if mode != "off" and plan.gate in ("lhs", "both") and lbits is not None:
+        xtbits = lbits.T
+        wg_gate = "lhs"
+    dw_plan = sasa.SkipPlan(
+        gate=wg_gate, variant="gated" if wg_gate != "none" else "dense",
+        block_m=plan.block_k, block_k=plan.block_m, block_n=plan.block_n,
+    )
+    dw = _run_matmul(
+        x.T, g, xtbits, None, dw_plan, mode, interpret, w.dtype
+    )
+    return dx, dw, None, None
+
+
+_sparce_matmul.defvjp(_fwd, _bwd)
+
+
+def sparce_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: SparsityConfig,
+    plan: Optional[sasa.SkipPlan] = None,
+    *,
+    lhs_bitmap: Optional[sprf.TileBitmap] = None,
+    rhs_bitmap: Optional[sprf.TileBitmap] = None,
+) -> jax.Array:
+    """y = x @ w with SparCE tile skipping per ``cfg``/``plan``.
+
+    x: (M, K) activations (M = flattened batch*seq), w: (K, N) weights.
+    """
+    if not cfg.enabled or cfg.mode == "off":
+        return jnp.dot(x, w)
+    if plan is None:
+        gate = "lhs" if lhs_bitmap is not None else (
+            "rhs" if rhs_bitmap is not None else "none"
+        )
+        if lhs_bitmap is not None and rhs_bitmap is not None:
+            gate = "both"
+        plan = sasa.SkipPlan(
+            gate=gate, variant="gated",
+            block_m=cfg.block_m, block_k=cfg.block_k, block_n=cfg.block_n,
+        )
+    lbits = lhs_bitmap.bits if lhs_bitmap is not None else None
+    rbits = rhs_bitmap.bits if rhs_bitmap is not None else None
+    return _sparce_matmul(x, w, lbits, rbits, plan, cfg.mode, cfg.interpret)
+
+
+def relu_with_bitmap(
+    x: jax.Array, cfg: SparsityConfig
+) -> Tuple[jax.Array, Optional[sprf.TileBitmap]]:
+    """Producer-fused SVC: relu + tile bitmap in one pass.
+
+    Accepts (..., features); bitmap is over the flattened-2D view, which is
+    exactly the layout the consuming matmul sees.
+    """
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if not cfg.enabled or cfg.mode == "off":
+        return jnp.maximum(x, 0), None
+    if cfg.mode == "kernel":
+        y2, bmp = kops.relu_with_bitmap(
+            x2, (cfg.block_m, cfg.block_k), interpret=cfg.interpret
+        )
+        return y2.reshape(shape), bmp
+    y2 = jnp.maximum(x2, 0)
+    return y2.reshape(shape), sprf.compute_bitmap(y2, (cfg.block_m, cfg.block_k))
+
+
+def relu2_with_bitmap(
+    x: jax.Array, cfg: SparsityConfig
+) -> Tuple[jax.Array, Optional[sprf.TileBitmap]]:
+    """Squared ReLU ('relufication' option): same zero pattern as ReLU."""
+    y, bmp = relu_with_bitmap(x, cfg)
+    return y * y, bmp

@@ -1,0 +1,170 @@
+"""Sparsity Register File (SpRF) analogue: per-tile zero bitmaps.
+
+In SparCE, the SpRF holds one ``isSparse`` bit per architectural register,
+updated for free at the writeback stage by the Sparse Value Checker (SVC).
+On TPU the skippable unit is a VMEM tile, so the SpRF becomes a *tile
+bitmap*: one bit per (block_m x block_k) tile of a sparse operand, with
+bit == 1 meaning "this tile is entirely zero" (the ``isSparse`` semantics).
+
+Bitmaps are produced either
+  * fused into the producer kernel (``kernels/relu_bitmap.py`` -- the
+    SVC-at-writeback analogue: the ReLU that creates the zeros also emits
+    the bits in the same pass), or
+  * by :func:`compute_bitmap` (pure-jnp; used for weights at load time --
+    static sparsity -- and as the reference oracle).
+
+The paper's ``regUpdInFlight`` hazard bit has no explicit analogue: in a
+jax dataflow graph the bitmap is an SSA value, so a consumer can never
+observe a stale bit. This is noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TileBitmap:
+    """Per-tile sparsity metadata for a 2-D operand.
+
+    Attributes:
+      bits: int32[num_tiles_rows, num_tiles_cols]; 1 == tile all-zero
+        (skippable), 0 == tile has at least one nonzero.
+      block: static (block_rows, block_cols) tile shape the bits refer to.
+      shape: static logical (rows, cols) of the operand (pre-padding).
+    """
+
+    bits: jax.Array
+    block: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return self.bits.shape  # type: ignore[return-value]
+
+    def sparsity(self) -> jax.Array:
+        """Fraction of tiles that are skippable (block-level sparsity)."""
+        return jnp.mean(self.bits.astype(jnp.float32))
+
+    def num_skipped(self) -> jax.Array:
+        return jnp.sum(self.bits)
+
+    def transpose(self) -> "TileBitmap":
+        return TileBitmap(
+            bits=self.bits.T,
+            block=(self.block[1], self.block[0]),
+            shape=(self.shape[1], self.shape[0]),
+        )
+
+    def logical_or(self, other: "TileBitmap") -> "TileBitmap":
+        """SpRFCondition ``Ra | Rb``: skip when either operand tile is zero.
+
+        Used when both matmul operands are sparse: the product tile is
+        redundant when *either* input tile is entirely zero.
+        """
+        assert self.bits.shape == other.bits.shape and self.block == other.block
+        return TileBitmap(
+            bits=jnp.maximum(self.bits, other.bits),
+            block=self.block,
+            shape=self.shape,
+        )
+
+
+def compute_bitmap(x: jax.Array, block: Tuple[int, int]) -> TileBitmap:
+    """Pure-jnp bitmap computation (reference / weights path).
+
+    A tile is skippable iff every element in it is exactly zero. Operands
+    whose dims are not multiples of ``block`` are treated as zero-padded;
+    padding never flips a tile to nonzero.
+    """
+    assert x.ndim == 2, f"bitmaps are 2-D tile metadata, got shape {x.shape}"
+    rows, cols = x.shape
+    br, bc = block
+    pr, pc = _ceil_div(rows, br) * br, _ceil_div(cols, bc) * bc
+    if (pr, pc) != (rows, cols):
+        x = jnp.pad(x, ((0, pr - rows), (0, pc - cols)))
+    t = x.reshape(pr // br, br, pc // bc, bc)
+    any_nonzero = jnp.any(t != 0, axis=(1, 3))
+    return TileBitmap(
+        bits=(~any_nonzero).astype(jnp.int32), block=(br, bc), shape=(rows, cols)
+    )
+
+
+def weight_bitmap(w: jax.Array, block: Tuple[int, int]) -> TileBitmap:
+    """Static-sparsity bitmap for (pruned) weights; computed once at load."""
+    return compute_bitmap(w, block)
+
+
+def prune_weights(
+    w: jax.Array, sparsity: float, block: Tuple[int, int] | None = None,
+    *, seed: int = 0,
+) -> jax.Array:
+    """Magnitude-prune ``w`` to ``sparsity`` fraction of zeros.
+
+    With ``block`` given, prunes whole blocks by block-L2 magnitude
+    (structured pruning, the hardware-friendly mode the paper cites as
+    'customize the pruning to match the underlying hardware organization').
+    """
+    del seed
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(f"sparsity must be in [0, 1), got {sparsity}")
+    if sparsity == 0.0:
+        return w
+    if block is None:
+        k = int(round(sparsity * w.size))
+        if k == 0:
+            return w
+        thresh = jnp.sort(jnp.abs(w).reshape(-1))[k - 1]
+        return jnp.where(jnp.abs(w) <= thresh, 0.0, w).astype(w.dtype)
+    rows, cols = w.shape
+    br, bc = block
+    pr, pc = _ceil_div(rows, br) * br, _ceil_div(cols, bc) * bc
+    wp = jnp.pad(w, ((0, pr - rows), (0, pc - cols)))
+    t = wp.reshape(pr // br, br, pc // bc, bc)
+    mag = jnp.sqrt(jnp.sum(t.astype(jnp.float32) ** 2, axis=(1, 3)))
+    k = int(round(sparsity * mag.size))
+    if k == 0:
+        return w
+    thresh = jnp.sort(mag.reshape(-1))[k - 1]
+    keep = (mag > thresh)[:, None, :, None]
+    wp = jnp.where(keep, t, 0.0).reshape(pr, pc).astype(w.dtype)
+    return wp[:rows, :cols]
+
+
+def random_sparse(
+    key: jax.Array, shape: Tuple[int, int], sparsity: float,
+    dtype=jnp.float32, *, cluster: Tuple[int, int] | None = None,
+) -> jax.Array:
+    """Random matrix with an exact fraction of zeros (paper Fig. 17 setup:
+    'the location of the zeros and other entries were chosen at random').
+
+    ``cluster`` zeroes out whole (r, c) blocks instead of single words,
+    modelling the block-clustered sparsity the paper observes in pruned
+    weights (Section 6.3).
+    """
+    kv, km = jax.random.split(key)
+    vals = jax.random.normal(kv, shape, dtype=jnp.float32)
+    if cluster is None:
+        n = int(np.prod(shape))
+        nz = int(round(sparsity * n))
+        perm = jax.random.permutation(km, n)
+        mask = jnp.ones((n,), jnp.float32).at[perm[:nz]].set(0.0).reshape(shape)
+    else:
+        cr, cc = cluster
+        gr, gc = _ceil_div(shape[0], cr), _ceil_div(shape[1], cc)
+        n = gr * gc
+        nz = int(round(sparsity * n))
+        perm = jax.random.permutation(km, n)
+        gmask = jnp.ones((n,), jnp.float32).at[perm[:nz]].set(0.0)
+        mask = jnp.repeat(jnp.repeat(gmask.reshape(gr, gc), cr, 0), cc, 1)
+        mask = mask[: shape[0], : shape[1]]
+    return (vals * mask).astype(dtype)

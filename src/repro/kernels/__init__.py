@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for SparCE (validated via interpret=True on CPU).
+
+Modules: sparce_gemm (gated/compacted GEMM), relu_bitmap (fused SVC),
+ops (padded jit wrappers), ref (pure-jnp oracles).
+"""
+from repro.kernels import ops, ref, relu_bitmap, sparce_decode_attn, sparce_gemm  # noqa: F401

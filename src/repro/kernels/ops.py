@@ -1,0 +1,135 @@
+"""Public jit'd wrappers over the SparCE Pallas kernels.
+
+Handles padding to block multiples, variant/gate dispatch from a SkipPlan,
+and the transpose trick that reuses the lhs-compacted kernel for
+rhs-gated compaction.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sasa import SkipPlan
+from repro.core.sprf import TileBitmap
+from repro.kernels import sparce_gemm as _sg
+from repro.kernels import relu_bitmap as _rb
+
+
+def _ceil_to(v: int, q: int) -> int:
+    return -(-v // q) * q
+
+
+def _pad2(x: jax.Array, r: int, c: int) -> jax.Array:
+    if x.shape == (r, c):
+        return x
+    return jnp.pad(x, ((0, r - x.shape[0]), (0, c - x.shape[1])))
+
+
+def sparce_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    plan: SkipPlan,
+    *,
+    lhs_bitmap: Optional[TileBitmap] = None,
+    rhs_bitmap: Optional[TileBitmap] = None,
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """y[M,N] = x[M,K] @ w[K,N] under ``plan``, dropping gated tiles.
+
+    interpret=True is the CPU-validation mode; on a real TPU deployment
+    the same call sites set interpret=False.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    out_dtype = out_dtype or x.dtype
+    bm, bk, bn = plan.block_m, plan.block_k, plan.block_n
+    pm, pk, pn = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp, wp = _pad2(x, pm, pk), _pad2(w, pk, pn)
+
+    def fit_bits(bmp: TileBitmap, grid):
+        assert bmp.block in ((bm, bk), (bk, bn)), (bmp.block, plan)
+        bits = bmp.bits
+        if bits.shape != grid:
+            # Padding tiles are all-zero => skippable => bit 1.
+            bits = jnp.pad(
+                bits,
+                ((0, grid[0] - bits.shape[0]), (0, grid[1] - bits.shape[1])),
+                constant_values=1,
+            )
+        return bits
+
+    gate = plan.gate
+    if gate == "none" or plan.variant == "dense":
+        y = jnp.dot(
+            xp.astype(jnp.float32), wp.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ).astype(out_dtype)
+        return y[:m, :n]
+
+    if gate == "lhs":
+        assert lhs_bitmap is not None
+        bits = fit_bits(lhs_bitmap, (pm // bm, pk // bk))
+        fn = (
+            _sg.sparce_gemm_compacted
+            if plan.variant == "compacted"
+            else _sg.sparce_gemm_gated
+        )
+        y = fn(
+            xp, wp, bits, block_m=bm, block_k=bk, block_n=bn,
+            out_dtype=out_dtype, interpret=interpret,
+        )
+    elif gate == "rhs":
+        assert rhs_bitmap is not None
+        bits = fit_bits(rhs_bitmap, (pk // bk, pn // bn))
+        if plan.variant == "compacted":
+            # y = (w^T @ x^T)^T with lhs-gating on w^T's (n, k) tiles.
+            yt = _sg.sparce_gemm_compacted(
+                wp.T, xp.T, bits.T, block_m=bn, block_k=bk, block_n=bm,
+                out_dtype=out_dtype, interpret=interpret,
+            )
+            y = yt.T
+        else:
+            y = _sg.sparce_gemm_gated(
+                xp, wp, bits, gate="rhs", block_m=bm, block_k=bk,
+                block_n=bn, out_dtype=out_dtype, interpret=interpret,
+            )
+    elif gate == "both":
+        assert lhs_bitmap is not None and rhs_bitmap is not None
+        lb = fit_bits(lhs_bitmap, (pm // bm, pk // bk))
+        rb = fit_bits(rhs_bitmap, (pk // bk, pn // bn))
+        y = _sg.sparce_gemm_gated_both(
+            xp, wp, lb, rb, block_m=bm, block_k=bk, block_n=bn,
+            out_dtype=out_dtype, interpret=interpret,
+        )
+    else:
+        raise ValueError(gate)
+    return y[:m, :n]
+
+
+def relu_with_bitmap(
+    x: jax.Array, block, *, interpret: bool = True
+) -> tuple[jax.Array, TileBitmap]:
+    """Fused relu + SVC bitmap over a 2-D activation."""
+    r, c = x.shape
+    br, bc = block
+    pr, pc = _ceil_to(r, br), _ceil_to(c, bc)
+    xp = _pad2(x, pr, pc)
+    y, bits = _rb.relu_bitmap(xp, block_r=br, block_c=bc, interpret=interpret)
+    return y[:r, :c], TileBitmap(bits=bits, block=(br, bc), shape=(r, c))
+
+
+def relu_bwd_with_bitmap(
+    x: jax.Array, g: jax.Array, block, *, interpret: bool = True
+) -> tuple[jax.Array, TileBitmap]:
+    r, c = x.shape
+    br, bc = block
+    pr, pc = _ceil_to(r, br), _ceil_to(c, bc)
+    xp, gp = _pad2(x, pr, pc), _pad2(g, pr, pc)
+    gx, bits = _rb.relu_bwd_bitmap(
+        xp, gp, block_r=br, block_c=bc, interpret=interpret
+    )
+    return gx[:r, :c], TileBitmap(bits=bits, block=(br, bc), shape=(r, c))

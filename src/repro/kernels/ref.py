@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for the SparCE Pallas kernels.
+
+Kernel semantics (shared contract, tested via assert_allclose):
+
+  * ``sparce_gemm``: y = x @ w where the contribution of every tile whose
+    gating bit is 1 is dropped. When the bits are honest (bit=1 only for
+    truly all-zero tiles) this is bit-exact dense matmul; tests also set
+    dishonest bits to prove the kernel actually skips.
+  * ``relu_bitmap``: y = relu(x) plus the per-tile all-zero bitmap of y
+    (the fused SVC-at-writeback analogue).
+  * ``relu_bwd_bitmap``: gx = g * (x > 0) plus the per-tile all-zero
+    bitmap of gx (error sparsity for BP/WG).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad2(x: jax.Array, br: int, bc: int) -> jax.Array:
+    r, c = x.shape
+    pr, pc = _ceil_div(r, br) * br, _ceil_div(c, bc) * bc
+    if (pr, pc) != (r, c):
+        x = jnp.pad(x, ((0, pr - r), (0, pc - c)))
+    return x
+
+
+def mask_tiles(x: jax.Array, bits: jax.Array, block: Tuple[int, int]) -> jax.Array:
+    """Zero out the tiles of ``x`` whose bit is 1."""
+    r, c = x.shape
+    br, bc = block
+    xp = _pad2(x, br, bc)
+    pr, pc = xp.shape
+    t = xp.reshape(pr // br, br, pc // bc, bc)
+    keep = (bits == 0)[:, None, :, None]
+    t = jnp.where(keep, t, jnp.zeros_like(t))
+    return t.reshape(pr, pc)[:r, :c]
+
+
+def sparce_gemm_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bits_lhs: Optional[jax.Array] = None,
+    bits_rhs: Optional[jax.Array] = None,
+    block_m: int,
+    block_k: int,
+    block_n: int,
+    out_dtype=None,
+) -> jax.Array:
+    """Oracle: mask gated tiles, then dense matmul in f32 accumulation."""
+    if bits_lhs is not None:
+        x = mask_tiles(x, bits_lhs, (block_m, block_k))
+    if bits_rhs is not None:
+        w = mask_tiles(w, bits_rhs, (block_k, block_n))
+    out_dtype = out_dtype or x.dtype
+    y = jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(out_dtype)
+
+
+def relu_bitmap_ref(
+    x: jax.Array, block: Tuple[int, int]
+) -> Tuple[jax.Array, jax.Array]:
+    y = jnp.maximum(x, 0).astype(x.dtype)
+    br, bc = block
+    yp = _pad2(y, br, bc)
+    pr, pc = yp.shape
+    t = yp.reshape(pr // br, br, pc // bc, bc)
+    bits = (~jnp.any(t > 0, axis=(1, 3))).astype(jnp.int32)
+    return y, bits
+
+
+def relu_bwd_bitmap_ref(
+    x: jax.Array, g: jax.Array, block: Tuple[int, int]
+) -> Tuple[jax.Array, jax.Array]:
+    gx = jnp.where(x > 0, g, jnp.zeros_like(g)).astype(g.dtype)
+    br, bc = block
+    gp = _pad2(gx, br, bc)
+    pr, pc = gp.shape
+    t = gp.reshape(pr // br, br, pc // bc, bc)
+    bits = (~jnp.any(t != 0, axis=(1, 3))).astype(jnp.int32)
+    return gx, bits
+
+
+def decode_attn_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
+    *, scale: float | None = None,
+) -> jax.Array:
+    """Oracle for sparce_decode_attn: masked softmax over live prefixes.
+
+    q: (B, KV, g, D); k/v: (B, L, KV, D); lengths: (B,).
+    """
+    B, KV, g, D = q.shape
+    L = k.shape[1]
+    scale = scale if scale is not None else D**-0.5
+    s = jnp.einsum(
+        "bkgd,blkd->bkgl", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    valid = jnp.arange(L)[None, :] < lengths[:, None]  # (B, L)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,blkd->bkgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,98 @@
+"""Fused ReLU + tile-bitmap Pallas kernel: the SVC-at-writeback analogue.
+
+SparCE's Sparse Value Checker rides on the writeback stage: the zero check
+costs no extra pass because it happens while the value is being written.
+The TPU analogue: the producer kernel that writes the activation tile also
+reduces it to its ``isSparse`` bit in the same VMEM pass, so bitmap
+production is fused with the ReLU that creates the zeros -- no extra HBM
+read. Also provided: the ReLU backward + error-bitmap fusion (error
+sparsity for the BP/WG steps, Section 2.2.2 of the paper).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _relu_bitmap_kernel(x_ref, y_ref, bits_ref):
+    y = jnp.maximum(x_ref[...], 0)
+    y_ref[...] = y.astype(y_ref.dtype)
+    # Writeback-fused SVC: reduce the tile we just produced to one bit.
+    bits_ref[0, 0] = jnp.where(
+        jnp.any(y > 0), jnp.int32(0), jnp.int32(1)
+    )
+
+
+def _relu_bwd_bitmap_kernel(x_ref, g_ref, gx_ref, bits_ref):
+    gx = jnp.where(x_ref[...] > 0, g_ref[...], jnp.zeros_like(g_ref[...]))
+    gx_ref[...] = gx.astype(gx_ref.dtype)
+    bits_ref[0, 0] = jnp.where(
+        jnp.any(gx != 0), jnp.int32(0), jnp.int32(1)
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_r", "block_c", "interpret")
+)
+def relu_bitmap(
+    x: jax.Array, *, block_r: int, block_c: int, interpret: bool = False
+):
+    """Returns (relu(x), bits) with bits int32[r/block_r, c/block_c]."""
+    r, c = x.shape
+    if r % block_r or c % block_c:
+        raise ValueError(f"padded dims required: {x.shape} % ({block_r},{block_c})")
+    nr, nc = r // block_r, c // block_c
+    return pl.pallas_call(
+        _relu_bitmap_kernel,
+        grid=(nr, nc),
+        in_specs=[pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec(
+                (1, 1), lambda i, j: (i, j), memory_space=pltpu.SMEM
+            ),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), x.dtype),
+            jax.ShapeDtypeStruct((nr, nc), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_r", "block_c", "interpret")
+)
+def relu_bwd_bitmap(
+    x: jax.Array, g: jax.Array, *, block_r: int, block_c: int,
+    interpret: bool = False,
+):
+    """Returns (g * (x > 0), error-bits) -- fused error-sparsity writeback."""
+    r, c = x.shape
+    assert g.shape == x.shape
+    if r % block_r or c % block_c:
+        raise ValueError(f"padded dims required: {x.shape} % ({block_r},{block_c})")
+    nr, nc = r // block_r, c // block_c
+    return pl.pallas_call(
+        _relu_bwd_bitmap_kernel,
+        grid=(nr, nc),
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec(
+                (1, 1), lambda i, j: (i, j), memory_space=pltpu.SMEM
+            ),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), g.dtype),
+            jax.ShapeDtypeStruct((nr, nc), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, g)

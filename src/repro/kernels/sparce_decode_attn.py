@@ -1,0 +1,134 @@
+"""SparCE-gated decode attention: skip KV-cache tiles beyond each
+request's live length.
+
+Batched serving keeps a (B, L_max) KV cache; a request that has only
+generated ``len[b]`` tokens renders every cache tile past it redundant --
+dynamic sparsity in the paper's exact sense (the redundant region varies
+per input, and is pre-identifiable from metadata *before* the tiles are
+fetched). The per-request lengths are scalar-prefetched (the SASA-entry
+analogue); the PSRU analogue both predicates the dot (`@pl.when`) AND
+clamps the BlockSpec index so the HBM->VMEM DMA of dead tiles is never
+issued. At 25% average occupancy this skips ~75% of decode-attention
+fetch+compute -- the dominant cost of long-context serving.
+
+Grid: (B, nL) with the L-tile axis fastest; online-softmax stats carried
+in VMEM scratch across L tiles of one request.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, block_l: int, n_lt: int):
+    b, lt = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(lt == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    tile_start = lt * block_l
+    # PSRU skip condition: the whole tile is past the live length.
+    live = tile_start < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0]  # (KV, g, D)
+        k = k_ref[0]  # (block_l, KV, D)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k,
+            dimension_numbers=((((2,), (2,))), (((0,), (1,)))),
+            preferred_element_type=jnp.float32,
+        )  # (KV, g, block_l)
+        pos = tile_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, dimension=2)
+        s = jnp.where(pos < length, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v,
+            dimension_numbers=((((2,), (0,))), (((0,), (1,)))),
+            preferred_element_type=jnp.float32,
+        )  # (KV, g, D)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(lt == n_lt - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_l", "scale", "interpret"))
+def sparce_decode_attn(
+    q: jax.Array,  # (B, KV, g, D) grouped query heads
+    k: jax.Array,  # (B, L, KV, D) cache keys
+    v: jax.Array,  # (B, L, KV, D) cache values
+    lengths: jax.Array,  # (B,) int32 live lengths (inclusive of new token)
+    *,
+    block_l: int = 256,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, KV, g, D) attention output over live cache prefixes."""
+    B, KV, g, D = q.shape
+    L = k.shape[1]
+    if L % block_l:
+        raise ValueError(f"L={L} must be a multiple of block_l={block_l}")
+    n_lt = L // block_l
+    scale = scale if scale is not None else D**-0.5
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+
+    # Index maps: clamp dead tiles to the request's LAST live tile so the
+    # block index stops changing -> the pipeline issues no further DMA
+    # (fetch elision, not just compute elision).
+    def kv_index(b, lt, len_ref):
+        last_live = jnp.maximum(len_ref[b] - 1, 0) // block_l
+        return (b, jnp.minimum(lt, last_live), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, n_lt),
+        in_specs=[
+            pl.BlockSpec((1, KV, g, D), lambda b, lt, len_ref: (b, 0, 0, 0)),
+            pl.BlockSpec((1, block_l, KV, D), kv_index),
+            pl.BlockSpec((1, block_l, KV, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, KV, g, D), lambda b, lt, len_ref: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, g, D), jnp.float32),
+            pltpu.VMEM((KV, g), jnp.float32),
+            pltpu.VMEM((KV, g), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, block_l=block_l, n_lt=n_lt)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qs, k, v)
+
+
+def decode_attn_savings(lengths, L: int, block_l: int = 256):
+    """Fraction of cache tiles (fetch+compute) skipped -- the paper's
+    'redundant ops' metric for the serving cache."""
+    import numpy as np
+    lt = np.ceil(np.asarray(lengths) / block_l)
+    return float(1.0 - lt.sum() / (len(lengths) * (L // block_l)))

@@ -1,0 +1,84 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch smollm-135m --shape train_4k \
+        --mesh 16,16 --steps 1000 --ckpt-dir /ckpts/run1 [--zero1]
+
+On a real TPU fleet each host runs this under its own jax.distributed
+initialization; on this CPU container a --mesh 1,1 (or omitted) runs the
+same code path end-to-end with reduced configs via --reduced.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default=None, help="e.g. '16,16' or '2,16,16'")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--remat", default=None, choices=["none", "full", "dots"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke config (CPU-runnable)")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config, shape_by_name
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import DataConfig, make_batch_iterator
+    from repro.launch import mesh as mesh_lib
+    from repro.optim.adamw import AdamW, cosine_schedule
+    from repro.runtime.trainer import TrainConfig, Trainer
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.remat:
+        cfg = dataclasses.replace(cfg, remat=args.remat)
+
+    shape = shape_by_name(args.shape)
+    if args.seq_len or args.global_batch:
+        shape = ShapeConfig(
+            "custom", args.seq_len or shape.seq_len,
+            args.global_batch or shape.global_batch, "train")
+
+    mesh = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split(","))
+        axes = ("pod", "data", "model")[-len(dims):]
+        mesh = mesh_lib.make_mesh(dims, axes)
+
+    opt = AdamW(lr=cosine_schedule(args.lr, args.warmup, args.steps))
+    tc = TrainConfig(
+        steps=args.steps, log_every=args.log_every,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+        zero1=args.zero1, seed=args.seed,
+    )
+    trainer = Trainer(cfg, shape, opt, tc, mesh=mesh)
+    it = make_batch_iterator(cfg, shape, DataConfig(seed=args.seed))
+
+    def log(step, metrics):
+        if step % args.log_every == 0:
+            print(f"step {step:6d} loss {float(metrics['loss']):8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):8.3f} "
+                  f"lr {float(metrics['lr']):.2e}", flush=True)
+
+    out = trainer.run(it, metrics_cb=log)
+    print(f"done: {out['final_step']} steps, "
+          f"{len(out['straggler_events'])} straggler events")
+    return out
+
+
+if __name__ == "__main__":
+    main()

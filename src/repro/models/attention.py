@@ -1,0 +1,313 @@
+"""Attention: GQA (chunked flash-style) and DeepSeek MLA, with KV caches.
+
+Training/prefill use a double-scan online-softmax attention (bounded
+VMEM/HBM working set at 32k sequence). Decode is single-token with a
+functional KV cache. MLA decode uses the absorbed-matmul trick: attention
+runs in the compressed-latent space so the cache stays (kv_lora + rope)
+wide -- this is what makes deepseek-v3 decode_32k memory-feasible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import modules as nn
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init
+
+_NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, L, KV, hd)  [GQA]  or ckv (B, L, kv_lora) [MLA]
+    v: jax.Array  # (B, L, KV, hd)  [GQA]  or k_rope (B, L, rope) [MLA]
+    length: jax.Array  # int32 scalar: tokens already in cache
+
+
+# =============================================================== GQA / MHA
+def attn_init(key, cfg: ArchConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = nn.split_keys(key, 4)
+    p = {
+        "wq": nn.dense_init(ks[0], d, h * hd, dtype),
+        "wk": nn.dense_init(ks[1], d, kv * hd, dtype),
+        "wv": nn.dense_init(ks[2], d, kv * hd, dtype),
+        "wo": nn.dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = nn.zeros_init((h * hd,), dtype)
+        p["bk"] = nn.zeros_init((kv * hd,), dtype)
+        p["bv"] = nn.zeros_init((kv * hd,), dtype)
+    return p
+
+
+def _flash_chunked(q, k, v, *, q_offset: int, chunk_q: int, chunk_k: int,
+                   causal: bool = True):
+    """Online-softmax attention. q:(B,Sq,H,D) k,v:(B,Sk,KV,D); H=g*KV.
+
+    Scans q chunks (outer) and kv chunks (inner) carrying (acc, m, l).
+    ``q_offset`` is the absolute position of q[0] (prefill continuation).
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = D**-0.5
+    nq = max(1, Sq // chunk_q)
+    while Sq % nq:
+        nq -= 1
+    nk = max(1, Sk // chunk_k)
+    while Sk % nk:
+        nk -= 1
+    cq, ck = Sq // nq, Sk // nk
+
+    qc = q.reshape(B, nq, cq, KV, g, D)
+    kc = k.reshape(B, nk, ck, KV, D)
+    vc = v.reshape(B, nk, ck, KV, D)
+
+    def q_step(_, qi):
+        qblk, iq = qi  # (B, cq, KV, g, D), scalar index
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_step(carry, kj):
+            acc, m, l = carry
+            kblk, vblk, jk = kj  # (B, ck, KV, D)
+            k_pos = jk * ck + jnp.arange(ck)
+            # Mixed precision (§Perf iteration sm-1): operands stay bf16
+            # (half the HBM reads, MXU-rate dots), accumulate in f32.
+            s = jnp.einsum(
+                "bqkgd,bckd->bkgqc", qblk, kblk,
+                preferred_element_type=jnp.float32,
+            ) * scale  # (B, KV, g, cq, ck) f32
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bkgqc,bckd->bqkgd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, cq, KV, g, D), jnp.float32)
+        m0 = jnp.full((B, KV, g, cq), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, g, cq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return None, out
+
+    if nq == 1:
+        # Single q block: no outer scan, no output stacking.
+        _, out = q_step(None, (qc[:, 0], jnp.int32(0)))
+        return out.reshape(B, Sq, H, D).astype(q.dtype)
+    _, outs = jax.lax.scan(
+        q_step, None, (qc.swapaxes(0, 1), jnp.arange(nq))
+    )  # (nq, B, cq, KV, g, D)
+    out = outs.swapaxes(0, 1).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def _default_chunks(S: int) -> Tuple[int, int]:
+    """(chunk_q, chunk_k) for the double-scan flash attention.
+
+    §Perf iterations qw-3/sm-3/ds-4 swept chunk_q up to S (outer scan
+    removed): the cost_analysis memory term moved OPPOSITE to first-
+    principles traffic because XLA counts a while body once -- a larger
+    unscanned body surfaces bytes the chunked scan hides. We therefore
+    size chunks on real-hardware reasoning (bounded f32 accumulator,
+    fewer rescale rewrites than tiny chunks) and document the proxy
+    artifact in EXPERIMENTS.md instead of chasing it."""
+    return min(S, 512), min(S, 1024)
+
+
+def gqa_forward(
+    params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ArchConfig,
+    *,
+    cache: Optional[KVCache] = None,
+    chunk_q: Optional[int] = None,
+    chunk_k: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    """x: (B, S, d). With cache and S==1 -> decode step."""
+    B, S, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.dot(x, params["wq"])
+    k = jnp.dot(x, params["wk"])
+    v = jnp.dot(x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, h, hd)
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    dq, dk = _default_chunks(S)
+    chunk_q = chunk_q or dq
+    chunk_k = chunk_k or dk
+
+    if cache is None:
+        out = _flash_chunked(
+            q, k, v, q_offset=0, chunk_q=min(chunk_q, S), chunk_k=min(chunk_k, S)
+        )
+        new_cache = None
+    elif S == 1:
+        # Decode: write k/v at cache.length, attend over the full cache.
+        idx = cache.length
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
+        L = ck.shape[1]
+        g = h // kv
+        qd = q.reshape(B, kv, g, hd)
+        # bf16 cache reads with f32 accumulation (no f32 cache copy).
+        s = jnp.einsum(
+            "bkgd,blkd->bkgl", qd, ck, preferred_element_type=jnp.float32
+        ) * (hd**-0.5)
+        valid = jnp.arange(L) <= idx
+        s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgl,blkd->bkgd", p.astype(cv.dtype), cv,
+                       preferred_element_type=jnp.float32)
+        out = o.reshape(B, 1, h, hd).astype(x.dtype)
+        new_cache = KVCache(ck, cv, idx + 1)
+    else:
+        # Prefill into cache.
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, cache.length, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, cache.length, 0, 0))
+        out = _flash_chunked(
+            q, k, v, q_offset=0, chunk_q=min(chunk_q, S), chunk_k=min(chunk_k, S)
+        )
+        new_cache = KVCache(ck, cv, cache.length + S)
+
+    y = jnp.dot(out.reshape(B, S, h * hd), params["wo"])
+    return y, new_cache
+
+
+def gqa_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, max_len, kv, hd), dtype),
+        v=jnp.zeros((batch, max_len, kv, hd), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+# ===================================================================== MLA
+def mla_init(key, cfg: ArchConfig, dtype):
+    m = cfg.mla
+    assert m is not None
+    d, h = cfg.d_model, cfg.num_heads
+    ks = nn.split_keys(key, 8)
+    return {
+        "wdq": nn.dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "wuq": nn.dense_init(
+            ks[1], m.q_lora_rank, h * (m.qk_nope_dim + m.qk_rope_dim), dtype
+        ),
+        "wdkv": nn.dense_init(ks[2], d, m.kv_lora_rank, dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "wkr": nn.dense_init(ks[3], d, m.qk_rope_dim, dtype),
+        "wuk": nn.dense_init(ks[4], m.kv_lora_rank, h * m.qk_nope_dim, dtype),
+        "wuv": nn.dense_init(ks[5], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "wo": nn.dense_init(ks[6], h * m.v_head_dim, d, dtype),
+    }
+
+
+def mla_forward(
+    params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ArchConfig,
+    *,
+    cache: Optional[KVCache] = None,
+    chunk_q: Optional[int] = None,
+    chunk_k: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    m = cfg.mla
+    B, S, d = x.shape
+    dq_, dk_ = _default_chunks(S)
+    chunk_q = chunk_q or dq_
+    chunk_k = chunk_k or dk_
+    h = cfg.num_heads
+    nope, rope_d, vd = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
+
+    cq = rmsnorm(params["q_norm"], jnp.dot(x, params["wdq"]), cfg.norm_eps)
+    q = jnp.dot(cq, params["wuq"]).reshape(B, S, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = rmsnorm(params["kv_norm"], jnp.dot(x, params["wdkv"]), cfg.norm_eps)
+    kr = apply_rope(
+        jnp.dot(x, params["wkr"])[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]  # (B, S, rope_d), shared across heads
+
+    if cache is None or S > 1:
+        # Train/prefill: decompress and run chunked flash with KV=H.
+        k_nope = jnp.dot(ckv, params["wuk"]).reshape(B, S, h, nope)
+        v = jnp.dot(ckv, params["wuv"]).reshape(B, S, h, vd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, S, h, rope_d))], -1
+        )
+        qq = jnp.concatenate([q_nope, q_rope], -1)
+        # Pad v to qk head dim for the shared flash kernel, slice after.
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, (nope + rope_d) - vd)))
+        out = _flash_chunked(
+            qq, k, v_pad, q_offset=0,
+            chunk_q=min(chunk_q, S), chunk_k=min(chunk_k, S),
+        )[..., :vd]
+        new_cache = None
+        if cache is not None:
+            cc = jax.lax.dynamic_update_slice(cache.k, ckv, (0, cache.length, 0))
+            cr = jax.lax.dynamic_update_slice(cache.v, kr, (0, cache.length, 0))
+            new_cache = KVCache(cc, cr, cache.length + S)
+    else:
+        # Absorbed decode: attention in the compressed latent space.
+        idx = cache.length
+        cc = jax.lax.dynamic_update_slice(cache.k, ckv, (0, idx, 0))
+        cr = jax.lax.dynamic_update_slice(cache.v, kr, (0, idx, 0))
+        L = cc.shape[1]
+        wuk = params["wuk"].reshape(m.kv_lora_rank, h, nope)
+        # q_latent[b,h,r] = sum_n q_nope[b,h,n] * wuk[r,h,n]
+        # bf16 operands, f32 accumulation (no f32 cache copies).
+        q_lat = jnp.einsum(
+            "bhn,rhn->bhr", q_nope[:, 0], wuk,
+            preferred_element_type=jnp.float32,
+        )
+        s = (
+            jnp.einsum("bhr,blr->bhl", q_lat.astype(cc.dtype), cc,
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bhr,blr->bhl", q_rope[:, 0], cr,
+                         preferred_element_type=jnp.float32)
+        ) * ((nope + rope_d) ** -0.5)
+        valid = jnp.arange(L) <= idx
+        s = jnp.where(valid[None, None, :], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx_lat = jnp.einsum("bhl,blr->bhr", p.astype(cc.dtype), cc,
+                             preferred_element_type=jnp.float32)
+        wuv = params["wuv"].reshape(m.kv_lora_rank, h, vd)
+        out = jnp.einsum("bhr,rhv->bhv", ctx_lat.astype(wuv.dtype), wuv,
+                         preferred_element_type=jnp.float32)
+        out = out[:, None].astype(x.dtype)  # (B, 1, h, vd)
+        new_cache = KVCache(cc, cr, idx + 1)
+
+    y = jnp.dot(out.reshape(B, S, h * vd).astype(x.dtype), params["wo"])
+    return y, new_cache
+
+
+def mla_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
+    m = cfg.mla
+    return KVCache(
+        k=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        v=jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,100 @@
+"""Shared layers: RMSNorm, RoPE, MLP (with first-class SparCE gating).
+
+The MLP is where the paper's technique lands in an LM: with a ReLU-family
+activation the post-activation features are sparse, the SVC-fused bitmap
+is produced at 'writeback' (the activation that creates the zeros), and
+the down-projection GEMM consumes the bitmap.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sasa, sparse_ops, sprf
+from repro.models import modules as nn
+
+
+# ----------------------------------------------------------------- RMSNorm
+def rmsnorm_init(d: int, dtype):
+    return {"scale": nn.ones_init((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(dt)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]  # broadcast over heads
+    sin = sin[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- MLP
+def mlp_init(key, d: int, ff: int, act: str, dtype):
+    ks = nn.split_keys(key, 3)
+    p = {"w_out": nn.dense_init(ks[2], ff, d, dtype)}
+    if act in ("silu", "gelu"):  # gated (GLU) variant
+        p["w_in"] = nn.dense_init(ks[0], d, ff, dtype)
+        p["w_gate"] = nn.dense_init(ks[1], d, ff, dtype)
+    else:  # relu / relu2: plain 2-matrix MLP (the paper's setting)
+        p["w_in"] = nn.dense_init(ks[0], d, ff, dtype)
+    return p
+
+
+def _activate(
+    h: jax.Array, act: str, scfg: sparse_ops.SparsityConfig
+) -> Tuple[jax.Array, Optional[sprf.TileBitmap]]:
+    if act == "relu":
+        return sparse_ops.relu_with_bitmap(h, scfg)
+    if act == "relu2":
+        return sparse_ops.relu2_with_bitmap(h, scfg)
+    if act == "silu":
+        return jax.nn.silu(h), None
+    if act == "gelu":
+        return jax.nn.gelu(h), None
+    raise ValueError(act)
+
+
+def mlp_fwd(
+    params, x: jax.Array, act: str, scfg: sparse_ops.SparsityConfig
+) -> jax.Array:
+    """x: (..., d). SparCE path: relu-family act -> bitmap -> gated w_out."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    h = jnp.dot(x2, params["w_in"])
+    if act in ("silu", "gelu"):
+        a, _ = _activate(h, act, scfg)
+        a = a * jnp.dot(x2, params["w_gate"])
+        y = jnp.dot(a, params["w_out"])
+        return y.reshape(shape)
+    a, bmp = _activate(h, act, scfg)
+    if scfg.enabled and bmp is not None and scfg.gate_activations:
+        plan = sasa.SkipPlan(
+            gate="lhs",
+            variant="gated",
+            block_m=scfg.block_m, block_k=scfg.block_k, block_n=scfg.block_n,
+        )
+        y = sparse_ops.sparce_matmul(a, params["w_out"], scfg, plan, lhs_bitmap=bmp)
+    else:
+        y = jnp.dot(a, params["w_out"])
+    return y.reshape(shape)

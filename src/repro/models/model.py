@@ -1,0 +1,244 @@
+"""Top-level language model: init / loss / prefill / decode for every
+assigned architecture family (dense, moe, ssm, hybrid, vlm, audio).
+
+Batch convention:
+  tokens      : int32 (B, S)            [audio: (B, K, S) codebook streams]
+  loss_mask   : f32 (B, S) optional     (1 = position contributes to loss)
+  patch_embeds: (B, P, d) vlm only      (precomputed frontend stub per spec)
+
+Targets are ``tokens`` shifted left by one inside the loss.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import modules as nn
+from repro.models import transformer as tfm
+from repro.models.layers import rmsnorm, rmsnorm_init
+
+
+def _dt(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# -------------------------------------------------------------------- init
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    dtype = _dt(cfg)
+    ks = nn.split_keys(key, 6)
+    params: Dict[str, Any] = {"final_norm": rmsnorm_init(cfg.d_model, dtype)}
+
+    if cfg.frontend == "codes":
+        params["embed"] = (
+            jax.random.normal(
+                ks[0], (cfg.num_codebooks, cfg.vocab_size, cfg.d_model),
+                jnp.float32,
+            ) * 0.02
+        ).astype(dtype)
+        params["heads"] = (
+            jax.random.normal(
+                ks[1], (cfg.num_codebooks, cfg.d_model, cfg.vocab_size),
+                jnp.float32,
+            ) * cfg.d_model**-0.5
+        ).astype(dtype)
+    else:
+        params["embed"] = nn.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            params["head"] = nn.dense_init(
+                ks[1], cfg.d_model, cfg.vocab_size, dtype
+            )
+
+    if cfg.family == "ssm":
+        params["stack"] = tfm.stack_init(ks[2], cfg, cfg.num_layers, "ssm")
+    elif cfg.family == "hybrid":
+        params["hybrid"] = tfm.hybrid_init(ks[2], cfg)
+    elif cfg.family == "moe":
+        if cfg.first_k_dense:
+            params["dense_stack"] = tfm.stack_init(
+                ks[2], cfg, cfg.first_k_dense, "dense"
+            )
+        params["stack"] = tfm.stack_init(
+            ks[3], cfg, cfg.num_layers - cfg.first_k_dense, "moe"
+        )
+    else:  # dense / vlm / audio
+        params["stack"] = tfm.stack_init(ks[2], cfg, cfg.num_layers, "dense")
+    return params
+
+
+# ----------------------------------------------------------------- forward
+def _embed(params, cfg: ArchConfig, tokens: jax.Array,
+           patch_embeds: Optional[jax.Array]) -> jax.Array:
+    if cfg.frontend == "codes":
+        # tokens: (B, K, S); params['embed']: (K, V, d). Sum codebook
+        # embeddings (musicgen-style parallel streams).
+        x = jnp.zeros(
+            (tokens.shape[0], tokens.shape[2], cfg.d_model), _dt(cfg)
+        )
+        for k in range(cfg.num_codebooks):
+            x = x + jnp.take(params["embed"][k], tokens[:, k, :], axis=0)
+        return x
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, S, d)
+    if cfg.frontend == "patches" and patch_embeds is not None:
+        # Prefill/train: patches prepended; decode steps pass tokens only.
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _backbone(params, cfg: ArchConfig, x, positions, caches):
+    if cfg.family == "ssm":
+        return tfm.stack_fwd(params["stack"], x, positions, cfg, "ssm",
+                             None if caches is None else caches["stack"])
+    if cfg.family == "hybrid":
+        x, nc, aux = tfm.hybrid_fwd(
+            params["hybrid"], x, positions, cfg,
+            None if caches is None else caches["hybrid"],
+        )
+        return x, (None if nc is None else nc), aux
+    if cfg.family == "moe":
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches: Dict[str, Any] = {}
+        if cfg.first_k_dense:
+            dc = None if caches is None else caches["dense_stack"]
+            x, ndc, aux = tfm.stack_fwd(
+                params["dense_stack"], x, positions, cfg, "dense", dc
+            )
+            aux_total += aux
+            new_caches["dense_stack"] = ndc
+        mc = None if caches is None else caches["stack"]
+        x, nmc, aux = tfm.stack_fwd(params["stack"], x, positions, cfg, "moe", mc)
+        aux_total += aux
+        new_caches["stack"] = nmc
+        return x, new_caches, aux_total
+    sc = None if caches is None else caches["stack"]
+    return tfm.stack_fwd(params["stack"], x, positions, cfg, "dense", sc)
+
+
+def _normalize_backbone_caches(cfg, new_caches):
+    if new_caches is None:
+        return None
+    if cfg.family in ("ssm", "dense", "vlm", "audio"):
+        return {"stack": new_caches}
+    if cfg.family == "hybrid":
+        return {"hybrid": new_caches}
+    return new_caches  # moe already a dict
+
+
+def _logits(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.frontend == "codes":
+        # (B, S, d) x (K, d, V) -> (B, S, K, V)
+        return jnp.einsum(
+            "bsd,kdv->bskv", x.astype(jnp.float32),
+            params["heads"].astype(jnp.float32),
+        )
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.dot(x.astype(jnp.float32), head.astype(jnp.float32))
+
+
+def forward(
+    params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+    caches: Optional[Dict[str, Any]] = None,
+    *, last_only: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """Full-sequence forward. Returns (logits, new_caches, aux_loss).
+
+    last_only=True computes logits for the final position only (prefill
+    serving path: avoids materializing the (B, S, V) logits tensor).
+    """
+    tokens = batch["tokens"]
+    x = _embed(params, cfg, tokens, batch.get("patch_embeds"))
+    B, S = x.shape[0], x.shape[1]
+    offset = jnp.zeros((), jnp.int32)
+    if caches is not None:
+        offset = _cache_length(cfg, caches)
+    positions = offset + jnp.arange(S, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (B, S))
+    x, new_caches, aux = _backbone(params, cfg, x, positions, caches)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    logits = _logits(params, cfg, x)
+    return logits, _normalize_backbone_caches(cfg, new_caches), aux
+
+
+def _cache_length(cfg, caches):
+    leaf = caches
+    for k in ("stack", "hybrid", "dense_stack"):
+        if isinstance(leaf, dict) and k in leaf:
+            leaf = leaf[k]
+            break
+    if cfg.family == "hybrid":
+        return leaf["attn"].length[0]
+    if cfg.family == "ssm":
+        return jnp.zeros((), jnp.int32)  # ssm cache has no positions
+    return leaf.length[0]  # stacked over layers -> take layer 0
+
+
+# -------------------------------------------------------------------- loss
+def loss_fn(
+    params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, _, aux = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    if cfg.frontend == "codes":
+        targets = tokens[:, :, 1:]  # (B, K, S-1)
+        lg = logits[:, :-1]  # (B, S-1, K, V)
+        lse = jax.nn.log_softmax(lg, axis=-1)
+        ll = jnp.take_along_axis(
+            lse, targets.transpose(0, 2, 1)[..., None], axis=-1
+        )[..., 0]
+        mask = jnp.ones(ll.shape[:2], jnp.float32)
+        if "loss_mask" in batch:
+            mask = mask * batch["loss_mask"][:, 1:]
+        loss = -jnp.sum(ll.mean(-1) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        if cfg.frontend == "patches":
+            P = batch["patch_embeds"].shape[1]
+            logits = logits[:, P:]  # text positions only
+        targets = tokens[:, 1:]
+        lg = logits[:, :-1]
+        lse = jax.nn.log_softmax(lg, axis=-1)
+        ll = jnp.take_along_axis(lse, targets[..., None], axis=-1)[..., 0]
+        mask = jnp.ones_like(ll)
+        if "loss_mask" in batch:
+            mask = batch["loss_mask"][:, 1:].astype(ll.dtype)
+        loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux, "total_loss": total}
+
+
+# ---------------------------------------------------------- prefill/decode
+def init_caches(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    if cfg.family == "hybrid":
+        return {"hybrid": tfm.hybrid_init_caches(cfg, batch, max_len)}
+    if cfg.family == "ssm":
+        return {"stack": tfm.stack_init_caches(
+            cfg, cfg.num_layers, "ssm", batch, max_len)}
+    if cfg.family == "moe":
+        caches = {"stack": tfm.stack_init_caches(
+            cfg, cfg.num_layers - cfg.first_k_dense, "moe", batch, max_len)}
+        if cfg.first_k_dense:
+            caches["dense_stack"] = tfm.stack_init_caches(
+                cfg, cfg.first_k_dense, "dense", batch, max_len)
+        return caches
+    return {"stack": tfm.stack_init_caches(
+        cfg, cfg.num_layers, "dense", batch, max_len)}
+
+
+def prefill(params, cfg: ArchConfig, batch, max_len: int,
+            *, last_only: bool = False):
+    """Run the prompt through the model, filling caches."""
+    B = batch["tokens"].shape[0]
+    caches = init_caches(cfg, B, max_len)
+    logits, new_caches, _ = forward(params, cfg, batch, caches,
+                                    last_only=last_only)
+    return logits, new_caches
+
+
+def decode_step(params, cfg: ArchConfig, last_tokens, caches):
+    """One-token step. last_tokens: (B, 1) or (B, K, 1) for audio."""
+    batch = {"tokens": last_tokens}
+    logits, new_caches, _ = forward(params, cfg, batch, caches)
+    return logits, new_caches

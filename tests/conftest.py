@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run single-device CPU (the dry-run subprocesses set their own
+# device-count flags). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,179 @@
+"""Unit tests for the paper's core: SpRF bitmaps, SASA planning,
+sparce_matmul semantics + error-sparse VJP, cost model bands."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import sasa, sprf
+from repro.core import sparse_ops as so
+
+
+# ------------------------------------------------------------------- SpRF
+def test_bitmap_marks_exactly_zero_tiles():
+    x = jnp.zeros((64, 256)).at[0, 0].set(1.0).at[40, 200].set(2.0)
+    bmp = sprf.compute_bitmap(x, (32, 128))
+    want = np.ones((2, 2), np.int32)
+    want[0, 0] = 0  # tile containing (0,0)
+    want[1, 1] = 0  # tile containing (40,200)
+    np.testing.assert_array_equal(np.asarray(bmp.bits), want)
+
+
+def test_bitmap_padding_is_skippable():
+    x = jnp.ones((100, 200))
+    bmp = sprf.compute_bitmap(x, (64, 128))
+    assert bmp.bits.shape == (2, 2)
+    # All tiles contain real data -> none skippable.
+    assert int(bmp.bits.sum()) == 0
+
+
+def test_bitmap_or_condition():
+    a = sprf.TileBitmap(jnp.array([[1, 0]], jnp.int32), (8, 8), (8, 16))
+    b = sprf.TileBitmap(jnp.array([[0, 1]], jnp.int32), (8, 8), (8, 16))
+    np.testing.assert_array_equal(
+        np.asarray(a.logical_or(b).bits), [[1, 1]])
+
+
+def test_prune_weights_hits_target_sparsity():
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    for s in (0.5, 0.85):
+        wp = sprf.prune_weights(w, s)
+        frac = float(jnp.mean(wp == 0))
+        assert abs(frac - s) < 0.02, (s, frac)
+
+
+def test_prune_weights_block_mode_zeroes_whole_blocks():
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 256))
+    wp = sprf.prune_weights(w, 0.5, block=(64, 128))
+    bmp = sprf.compute_bitmap(wp, (64, 128))
+    assert float(bmp.sparsity()) == pytest.approx(0.5, abs=0.13)
+
+
+def test_random_sparse_exact_fraction():
+    x = sprf.random_sparse(jax.random.PRNGKey(2), (128, 128), 0.7)
+    assert float(jnp.mean(x == 0)) == pytest.approx(0.7, abs=0.01)
+
+
+# ------------------------------------------------------------------- SASA
+def test_plan_operand_ordering_prefers_sparser_blockwise():
+    # paper 6.3: gate on the operand with the most block-wise sparsity
+    p = sasa.plan_matmul(512, 1024, 512, lhs_sparsity=0.6, rhs_sparsity=0.0,
+                         lhs_cluster=64 * 128)
+    assert p.gate == "lhs"
+    p = sasa.plan_matmul(512, 1024, 512, lhs_sparsity=0.0, rhs_sparsity=0.7,
+                         rhs_cluster=128 * 128)
+    assert p.gate == "rhs"
+    p = sasa.plan_matmul(512, 1024, 512)
+    assert p.gate == "none" and p.variant == "dense"
+
+
+def test_plan_blocks_are_hardware_aligned_and_fit_vmem():
+    p = sasa.plan_matmul(4096, 8192, 4096, lhs_sparsity=0.5, dtype="bfloat16")
+    assert p.block_k % 128 == 0 and p.block_n % 128 == 0
+    assert p.block_m % 16 == 0
+    ws = (p.block_m * p.block_k + p.block_k * p.block_n
+          + p.block_m * p.block_n) * 2
+    assert ws <= 8 * 1024 * 1024
+
+
+def test_expected_block_sparsity_monotone():
+    # i.i.d.: bigger blocks -> exponentially less block sparsity
+    assert sasa.expected_block_sparsity(0.5, 1) == 0.5
+    assert sasa.expected_block_sparsity(0.5, 8) == pytest.approx(0.5**8)
+    # clustering recovers it
+    assert sasa.expected_block_sparsity(0.5, 8, cluster_elems=8) == 0.5
+
+
+def test_analyze_network_counts_plans():
+    from repro.configs.paper_alexnet import ALEXNET_GEMMS
+    rep = sasa.analyze_network(ALEXNET_GEMMS)
+    assert 0.2 < rep["word_redundant_frac"] < 0.7
+    # paper: ~20 SASA entries suffice because compute is a few kernels;
+    # here: distinct plans should be small
+    assert rep["distinct_plans"] <= len(ALEXNET_GEMMS)
+
+
+# ------------------------------------------------------------- sparse_ops
+def test_sparce_matmul_honest_bitmap_is_exact():
+    cfg = so.SparsityConfig(enabled=True, mode="reference")
+    x = sprf.random_sparse(jax.random.PRNGKey(3), (128, 256), 0.5,
+                           cluster=(64, 128))
+    w = jax.random.normal(jax.random.PRNGKey(4), (256, 128))
+    bmp = sprf.compute_bitmap(x, (64, 128))
+    plan = sasa.SkipPlan(gate="lhs", variant="gated",
+                         block_m=64, block_k=128, block_n=128)
+    y = so.sparce_matmul(x, w, cfg, plan, lhs_bitmap=bmp)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.dot(x, w)), rtol=1e-4, atol=1e-4)
+
+
+def test_sparce_matmul_vjp_error_sparsity():
+    """Backward gating must not change gradients for honest bitmaps."""
+    cfg = so.SparsityConfig(enabled=True, mode="reference")
+    plan = sasa.SkipPlan(gate="lhs", variant="gated",
+                         block_m=32, block_k=128, block_n=128)
+    x = sprf.random_sparse(jax.random.PRNGKey(5), (64, 256), 0.6,
+                           cluster=(32, 128))
+    w = jax.random.normal(jax.random.PRNGKey(6), (256, 128))
+    bmp = sprf.compute_bitmap(x, (32, 128))
+
+    def f(x, w):
+        return jnp.sum(so.sparce_matmul(x, w, cfg, plan, lhs_bitmap=bmp) ** 2)
+
+    def fd(x, w):
+        return jnp.sum(jnp.dot(x, w) ** 2)
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    dx, dw = jax.grad(fd, argnums=(0, 1))(x, w)
+    # dw must match exactly (gated tiles of x are truly zero).
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(dw),
+                               rtol=1e-4, atol=1e-4)
+    # dx may differ ONLY on gated (all-zero) tiles of x: those gradients
+    # are dropped by design (their forward contribution is zero).
+    from repro.kernels.ref import mask_tiles
+    np.testing.assert_allclose(
+        np.asarray(mask_tiles(gx, bmp.bits, (32, 128))),
+        np.asarray(mask_tiles(dx, bmp.bits, (32, 128))),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_relu_with_bitmap_modes_agree():
+    cfg_ref = so.SparsityConfig(enabled=True, mode="reference")
+    cfg_k = so.SparsityConfig(enabled=True, mode="kernel")
+    x = jax.random.normal(jax.random.PRNGKey(7), (64, 256))
+    y1, b1 = so.relu_with_bitmap(x, cfg_ref)
+    y2, b2 = so.relu_with_bitmap(x, cfg_k)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(b1.bits), np.asarray(b2.bits))
+
+
+# ------------------------------------------------------------- cost model
+def test_gpp_layer_speedup_band_matches_paper():
+    """Paper: 1.11x-1.96x layer-level speedups at 10%-90% sparsity.
+    The analytic model lands at (1.07x, 2.2x) -- same band within the
+    fidelity of a latency-sum model (no cache misses, no dual-issue);
+    benchmarks/fig17 reports the deltas explicitly."""
+    lo = cm.gpp_gemm_time(169, 3456, 384, sparsity=0.10, cfg=cm.SCALAR_GPP)
+    hi = cm.gpp_gemm_time(169, 3456, 384, sparsity=0.90, cfg=cm.SCALAR_GPP)
+    assert 1.03 <= lo["speedup"] <= 1.25
+    assert 1.7 <= hi["speedup"] <= 2.4
+
+
+def test_gpp_app_reduction_band_scalar():
+    """Paper: 19%-31% app-level reduction for Dir-Conv-Scalar."""
+    from repro.configs.paper_alexnet import ALEXNET_GEMMS
+    times = [
+        cm.gpp_gemm_time(l.m, l.k, l.n, sparsity=l.act_sparsity,
+                         cfg=cm.SCALAR_GPP)
+        for l in ALEXNET_GEMMS
+    ]
+    app = cm.gpp_app_time(times, cfg=cm.SCALAR_GPP)
+    assert 0.15 <= app["app_reduction"] <= 0.35
+
+
+def test_tpu_gemm_savings_scale_with_skip():
+    a = cm.tpu_gemm_time(4096, 4096, 4096, tile_skip_frac=0.0)
+    b = cm.tpu_gemm_time(4096, 4096, 4096, tile_skip_frac=0.5)
+    assert b.speedup > 1.5
+    assert a.base_s == b.base_s

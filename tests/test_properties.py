@@ -1,0 +1,115 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core import sasa, sprf
+from repro.kernels import ref as kref
+from repro.kernels import sparce_gemm as sgk
+
+SET = dict(deadline=None, max_examples=20)
+
+
+@given(
+    st.integers(1, 4), st.integers(1, 4),
+    st.floats(0.0, 0.95), st.integers(0, 2**31 - 1),
+)
+@settings(**SET)
+def test_bitmap_iff_tile_zero(tm, tk, sparsity, seed):
+    """bits[i,j] == 1 iff tile (i,j) is entirely zero -- for any shape."""
+    bm, bk = 8, 128
+    x = sprf.random_sparse(
+        jax.random.PRNGKey(seed), (tm * bm, tk * bk), sparsity,
+        cluster=(bm, bk))
+    bits = np.asarray(sprf.compute_bitmap(x, (bm, bk)).bits)
+    xa = np.asarray(x)
+    for i in range(tm):
+        for j in range(tk):
+            tile = xa[i * bm:(i + 1) * bm, j * bk:(j + 1) * bk]
+            assert bits[i, j] == int(not tile.any())
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 0.9))
+@settings(**SET)
+def test_gated_kernel_equals_masked_oracle_for_arbitrary_bits(seed, p):
+    """The kernel contract holds for ARBITRARY bits, honest or not."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    M, K, N, bm, bk, bn = 64, 256, 128, 8, 128, 128
+    x = jax.random.normal(k1, (M, K))
+    w = jax.random.normal(k2, (K, N))
+    bits = (jax.random.uniform(k3, (M // bm, K // bk)) < p).astype(jnp.int32)
+    got = sgk.sparce_gemm_gated(
+        x, w, bits, block_m=bm, block_k=bk, block_n=bn, interpret=True)
+    want = kref.sparce_gemm_ref(
+        x, w, bits_lhs=bits, block_m=bm, block_k=bk, block_n=bn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 0.9))
+@settings(**SET)
+def test_compacted_equals_gated(seed, p):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    M, K, N, bm, bk, bn = 64, 512, 128, 8, 128, 128
+    x = jax.random.normal(k1, (M, K))
+    w = jax.random.normal(k2, (K, N))
+    bits = (jax.random.uniform(k3, (M // bm, K // bk)) < p).astype(jnp.int32)
+    a = sgk.sparce_gemm_gated(
+        x, w, bits, block_m=bm, block_k=bk, block_n=bn, interpret=True)
+    b = sgk.sparce_gemm_compacted(
+        x, w, bits, block_m=bm, block_k=bk, block_n=bn, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.floats(0.0, 0.94), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_prune_fraction_at_least_requested(s, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 64))
+    wp = sprf.prune_weights(w, s)
+    assert float(jnp.mean(wp == 0)) >= s - 0.01
+
+
+@given(st.floats(0.01, 0.99), st.floats(0.01, 0.99))
+@settings(**SET)
+def test_gpp_speedup_monotone_in_sparsity(s1, s2):
+    lo, hi = min(s1, s2), max(s1, s2)
+    a = cm.gpp_gemm_time(64, 64, 64, sparsity=lo, cfg=cm.SCALAR_GPP)
+    b = cm.gpp_gemm_time(64, 64, 64, sparsity=hi, cfg=cm.SCALAR_GPP)
+    assert b["speedup"] >= a["speedup"] - 1e-9
+    assert 1.0 <= a["speedup"]
+
+
+@given(st.integers(64, 2048), st.integers(128, 4096), st.integers(128, 2048),
+       st.floats(0.0, 0.99))
+@settings(**SET)
+def test_planner_blocks_always_legal(m, k, n, s):
+    p = sasa.plan_matmul(m, k, n, lhs_sparsity=s, lhs_cluster=1024)
+    assert p.block_m >= 8 and p.block_k >= 128 and p.block_n >= 128
+    assert p.block_k % 128 == 0 and p.block_n % 128 == 0
+    ws = (p.block_m * p.block_k + p.block_k * p.block_n
+          + p.block_m * p.block_n) * 4
+    assert ws <= 8 * 1024 * 1024
+    assert p.gate in ("lhs", "rhs", "both", "none")
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=10)
+def test_relu_bitmap_invariants(seed):
+    from repro.core.sparse_ops import SparsityConfig, relu_with_bitmap
+    cfg = SparsityConfig(enabled=True, mode="reference",
+                         block_m=8, block_k=128)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, 256)) - 0.5
+    y, bmp = relu_with_bitmap(x, cfg)
+    assert float(jnp.min(y)) >= 0.0
+    # every bit=1 tile of y is all zero; every bit=0 tile has a positive
+    ya = np.asarray(y)
+    bits = np.asarray(bmp.bits)
+    for i in range(bits.shape[0]):
+        for j in range(bits.shape[1]):
+            tile = ya[i * 8:(i + 1) * 8, j * 128:(j + 1) * 128]
+            assert (tile.max() == 0) == bool(bits[i, j])

@@ -1,0 +1,112 @@
+"""Sharding planner: rules, divisibility fallbacks, cache specs."""
+import os
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, shape_by_name
+from repro.launch import mesh as mesh_lib
+from repro.models import model as model_lib
+from repro.parallel import sharding as shd
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    # single CPU device: mesh (1,1) -- rule structure is still exercised
+    return mesh_lib.make_mesh((1, 1), ("data", "model"))
+
+
+def _specs(arch, mesh):
+    cfg = get_config(arch)
+    sds = jax.eval_shape(
+        lambda k: model_lib.init_params(cfg, k), jax.random.PRNGKey(0))
+    return cfg, sds, shd.param_specs(sds, mesh)
+
+
+def _flat(specs, sds):
+    out = {}
+
+    def rec(path, leaf, spec):
+        out[shd._leaf_name(path)] = (leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(rec, sds, specs)
+    return out
+
+
+def test_dense_tp_rules(mesh):
+    _, sds, specs = _specs("qwen1.5-110b", mesh)
+    f = _flat(specs, sds)
+    assert f["stack/mlp/w_in"][1] == P(None, None, "model")
+    assert f["stack/mlp/w_out"][1] == P(None, "model", None)
+    assert f["stack/attn/wq"][1] == P(None, None, "model")
+    assert f["stack/attn/wo"][1] == P(None, "model", None)
+    assert f["embed"][1] == P("model", None)
+    assert f["stack/attn_norm/scale"][1] == P(None, None)
+
+
+def test_moe_ep_rule_and_shared_tp(mesh):
+    _, sds, specs = _specs("deepseek-v3-671b", mesh)
+    f = _flat(specs, sds)
+    # routed experts: EP on the expert dim
+    assert f["stack/moe/w_in"][1] == P(None, "model", None, None)
+    assert f["stack/moe/w_out"][1] == P(None, "model", None, None)
+    # shared experts: plain TP
+    assert f["stack/moe/shared/w_in"][1] == P(None, None, "model")
+    # router replicated
+    assert f["stack/moe/router"][1] == P(None, None, None)
+    # dense first-k stack uses TP, NOT the expert rule
+    assert f["dense_stack/mlp/w_in"][1] == P(None, None, "model")
+
+
+def test_divisibility_fallback():
+    """qwen2-moe: 60 experts don't divide the 16-way 'model' axis, so EP
+    falls back and the expert FFN dim (1408 = 16*88) TP-shards instead;
+    smollm-135m dims (576, 192, 1536) all remain divisible and shard."""
+    mesh16 = mesh_lib.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        devices = mesh16.devices
+
+    cfg = get_config("qwen2-moe-a2.7b")
+    sds = jax.eval_shape(
+        lambda k: model_lib.init_params(cfg, k), jax.random.PRNGKey(0))
+    f = _flat(shd.param_specs(sds, FakeMesh()), sds)
+    assert f["stack/moe/w_in"][1] == P(None, None, None, "model")
+    assert f["stack/moe/w_out"][1] == P(None, None, "model", None)
+
+    cfg = get_config("smollm-135m")
+    sds = jax.eval_shape(
+        lambda k: model_lib.init_params(cfg, k), jax.random.PRNGKey(0))
+    f = _flat(shd.param_specs(sds, FakeMesh()), sds)
+    assert f["stack/attn/wq"][1] == P(None, None, "model")  # 576 = 16*36
+    assert f["stack/mlp/w_in"][1] == P(None, None, "model")
+
+
+def test_ssm_rules(mesh):
+    _, sds, specs = _specs("mamba2-2.7b", mesh)
+    f = _flat(specs, sds)
+    assert f["stack/mixer/in_proj"][1] == P(None, None, "model")
+    assert f["stack/mixer/out_proj"][1] == P(None, "model", None)
+    assert f["stack/mixer/conv_w"][1] == P(None, None, "model")
+
+
+def test_batch_and_cache_specs(mesh):
+    cfg = get_config("mistral-nemo-12b")
+    shape = shape_by_name("decode_32k")
+    caches = jax.eval_shape(
+        lambda: model_lib.init_caches(cfg, shape.global_batch, shape.seq_len))
+    cspec = shd.cache_spec(cfg, shape, mesh, caches)
+
+    flat = {}
+
+    def rec(path, leaf, spec):
+        flat[shd._leaf_name(path)] = (leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(rec, caches, cspec)
+    k = flat["stack/k"]
+    assert k[0] == (cfg.num_layers, 128, 32768, 8, 128)
+    assert k[1][1] in ("data", ("data",))  # batch dim sharded over data

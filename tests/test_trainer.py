@@ -1,0 +1,73 @@
+"""Trainer: loss goes down, checkpoint/restart recovery, stragglers."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, make_batch_iterator
+from repro.optim.adamw import AdamW
+from repro.runtime.trainer import TrainConfig, Trainer
+
+SHAPE = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+
+
+def _trainer(tmp_path=None, steps=30, **kw):
+    cfg = get_config("smollm-135m").reduced()
+    tc = TrainConfig(
+        steps=steps, log_every=1, ckpt_every=10,
+        ckpt_dir=str(tmp_path) if tmp_path else None,
+        async_ckpt=False, **kw,
+    )
+    return cfg, Trainer(cfg, SHAPE, AdamW(lr=3e-3, weight_decay=0.0), tc)
+
+
+def test_loss_decreases():
+    cfg, tr = _trainer(steps=40)
+    it = make_batch_iterator(cfg, SHAPE, DataConfig(noise=0.05))
+    out = tr.run(it)
+    losses = [h["loss"] for h in out["history"] if "loss" in h]
+    assert len(losses) >= 30
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first - 0.5, (first, last)
+
+
+def test_fault_recovery_restarts_from_checkpoint(tmp_path):
+    cfg, tr = _trainer(tmp_path, steps=25)
+    it = make_batch_iterator(cfg, SHAPE, DataConfig())
+    crashed = {"done": False}
+
+    def fault(step):
+        if step == 15 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("simulated preemption")
+
+    out = tr.run(it, fault_hook=fault)
+    events = [h for h in out["history"] if h.get("event") == "restart"]
+    assert len(events) == 1
+    assert out["final_step"] == 25
+    losses = [h["loss"] for h in out["history"] if "loss" in h]
+    assert np.isfinite(losses[-1])
+
+
+def test_straggler_detection():
+    import time
+    cfg, tr = _trainer(steps=15)
+    tr.tc = tr.tc  # noqa
+    it = make_batch_iterator(cfg, SHAPE, DataConfig())
+
+    def slow_hook(step):
+        if step == 12:
+            time.sleep(1.5)  # simulated slow host
+
+    out = tr.run(it, fault_hook=slow_hook)
+    assert any(e["step"] == 12 for e in out["straggler_events"])
+
+
+def test_restore_or_init_resumes(tmp_path):
+    cfg, tr = _trainer(tmp_path, steps=10)
+    it = make_batch_iterator(cfg, SHAPE, DataConfig())
+    tr.run(it)
+    # new trainer in same dir resumes at 10 and finishes to 12
+    cfg2, tr2 = _trainer(tmp_path, steps=12)
+    out = tr2.run(make_batch_iterator(cfg2, SHAPE, DataConfig(), start_step=10))
+    assert out["final_step"] == 12
