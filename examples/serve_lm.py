@@ -1,15 +1,23 @@
-"""Serving example (deliverable b): batched requests through the
-prefill + decode server, including the audio (musicgen codebook) path.
+"""Serving example: mixed-length requests through the continuous-batching
+prefill + decode engine, including the SparCE-gated MLP path and the
+audio (musicgen codebook) path.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
 from repro.launch import serve as serve_launch
 
-print("== text LM serving (smollm-135m reduced) ==")
+print("== text LM serving (smollm-135m reduced, mixed lengths) ==")
 serve_launch.main([
     "--arch", "smollm-135m", "--reduced",
     "--requests", "6", "--prompt-len", "8", "--max-new", "8",
-    "--batch-slots", "4",
+    "--batch-slots", "4", "--mixed",
+])
+
+print("\n== SparCE-gated serving (skip metrics on) ==")
+serve_launch.main([
+    "--arch", "smollm-135m", "--reduced",
+    "--requests", "6", "--prompt-len", "8", "--max-new", "8",
+    "--batch-slots", "4", "--mixed", "--sparce",
 ])
 
 print("\n== audio (EnCodec codebooks, musicgen reduced) ==")

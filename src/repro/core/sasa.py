@@ -193,6 +193,96 @@ def plan_matmul(
     )
 
 
+# ------------------------------------------------------- process-level cache
+# The SASA table is loaded ONCE per static region and consulted many
+# times (SASA-LD is hoisted out of the loop in the paper's Fig. 6). The
+# serving analogue: one decode step traces thousands of times per second
+# over the same (m, k, n) GEMM shapes, so plans are memoised process-wide
+# keyed on (m, k, n, dtype, sparsity-bucket, tiling overrides).
+_PLAN_CACHE: dict = {}
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+_SPARSITY_BUCKETS = 64  # sparsity quantised to 1/64 for cache keying
+
+
+def _bucket_sparsity(s: float) -> float:
+    """Quantise a sparsity estimate so near-identical values share a plan."""
+    s = min(max(float(s), 0.0), 1.0)
+    return round(s * _SPARSITY_BUCKETS) / _SPARSITY_BUCKETS
+
+
+def plan_matmul_cached(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    lhs_sparsity: float = 0.0,
+    rhs_sparsity: float = 0.0,
+    lhs_cluster: int = 1,
+    rhs_cluster: int = 1,
+    dtype: str = "float32",
+    block_m: Optional[int] = None,
+    block_k: Optional[int] = None,
+    block_n: Optional[int] = None,
+    min_expected_block_sparsity: float = 0.02,
+) -> SkipPlan:
+    """Memoised :func:`plan_matmul`.
+
+    Sparsity estimates are bucketed to 1/64 before keying AND before
+    planning, so a cached plan is always byte-identical to the uncached
+    ``plan_matmul`` called with the bucketed sparsities.
+    """
+    ls, rs = _bucket_sparsity(lhs_sparsity), _bucket_sparsity(rhs_sparsity)
+    key = ("plan", m, k, n, dtype, ls, rs, lhs_cluster, rhs_cluster,
+           block_m, block_k, block_n, min_expected_block_sparsity)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        _PLAN_CACHE_STATS["misses"] += 1
+        plan = plan_matmul(
+            m, k, n, lhs_sparsity=ls, rhs_sparsity=rs,
+            lhs_cluster=lhs_cluster, rhs_cluster=rhs_cluster, dtype=dtype,
+            block_m=block_m, block_k=block_k, block_n=block_n,
+            min_expected_block_sparsity=min_expected_block_sparsity,
+        )
+        _PLAN_CACHE[key] = plan
+    else:
+        _PLAN_CACHE_STATS["hits"] += 1
+    return plan
+
+
+def bitmap_gated_plan(
+    m: int, k: int, n: int, *, block_m: int, block_k: int, block_n: int,
+) -> SkipPlan:
+    """Cached gated-lhs plan for a GEMM whose lhs bitmap already exists.
+
+    Used on the producer-fused path (ReLU writes the bitmap, the down
+    projection consumes it): the gate side and tiling are dictated by the
+    bitmap, so no operand-ordering search is needed -- only the memoised
+    plan object, shared across every trace of the serving decode step.
+    """
+    key = ("gated-lhs", m, k, n, block_m, block_k, block_n)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        _PLAN_CACHE_STATS["misses"] += 1
+        plan = SkipPlan(
+            gate="lhs", variant="gated",
+            block_m=block_m, block_k=block_k, block_n=block_n,
+            table_entries=-(-m // block_m) * -(-k // block_k),
+        )
+        _PLAN_CACHE[key] = plan
+    else:
+        _PLAN_CACHE_STATS["hits"] += 1
+    return plan
+
+
+def plan_cache_stats() -> dict:
+    return dict(size=len(_PLAN_CACHE), **_PLAN_CACHE_STATS)
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+    _PLAN_CACHE_STATS["hits"] = _PLAN_CACHE_STATS["misses"] = 0
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerSpec:
     """One GEMM-shaped layer for network-level analysis."""

@@ -144,13 +144,38 @@ def sparce_matmul(
         )
         if lhs_bitmap is not None and rhs_bitmap is not None:
             gate = "both"
-        plan = sasa.SkipPlan(
-            gate=gate, variant="gated",
-            block_m=cfg.block_m, block_k=cfg.block_k, block_n=cfg.block_n,
-        )
+        if gate == "lhs":
+            # Hot path (serving MLP): memoised process-level plan.
+            plan = sasa.bitmap_gated_plan(
+                x.shape[0], x.shape[1], w.shape[1],
+                block_m=cfg.block_m, block_k=cfg.block_k, block_n=cfg.block_n,
+            )
+        else:
+            plan = sasa.SkipPlan(
+                gate=gate, variant="gated",
+                block_m=cfg.block_m, block_k=cfg.block_k, block_n=cfg.block_n,
+            )
     lbits = lhs_bitmap.bits if lhs_bitmap is not None else None
     rbits = rhs_bitmap.bits if rhs_bitmap is not None else None
     return _sparce_matmul(x, w, lbits, rbits, plan, cfg.mode, cfg.interpret)
+
+
+def gemm_skip_stats(
+    bitmap: Optional[sprf.TileBitmap], n: int, block_n: int
+) -> jax.Array:
+    """[skipped_tile_dots, total_tile_dots] for an lhs-gated y = x @ w.
+
+    Each lhs tile bit gates ``grid_n`` MXU tile-dots (one per output
+    column tile); the pair is the SASA-style accounting the paper reports
+    (redundant-MAC fraction, Fig. 4) at tile granularity, and is what the
+    serving engine surfaces as ``mlp_skip_fraction``.
+    """
+    if bitmap is None:
+        return jnp.zeros((2,), jnp.float32)
+    grid_n = -(-n // block_n)
+    total = bitmap.bits.size * grid_n
+    skipped = jnp.sum(bitmap.bits).astype(jnp.float32) * grid_n
+    return jnp.stack([skipped, jnp.asarray(total, jnp.float32)])
 
 
 def relu_with_bitmap(

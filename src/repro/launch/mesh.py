@@ -11,6 +11,18 @@ import math
 import jax
 
 
+def _axis_types_kw(n_axes: int) -> dict:
+    """axis_types=Auto on jax versions that have it (>=0.5), else nothing.
+
+    jax 0.4.x meshes are implicitly fully-auto, so omitting the kwarg is
+    semantically identical there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (one v5e pod, 256 chips) or 2x16x16 (two pods, 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -22,14 +34,14 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices, found {len(devices)} "
             "(dry-run must set --xla_force_host_platform_device_count=512)"
         )
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto, devices=devices[:n])
+    return jax.make_mesh(
+        shape, axes, devices=devices[:n], **_axis_types_kw(len(axes))
+    )
 
 
 def make_mesh(shape, axes):
     """Arbitrary small mesh for tests (e.g. (2, 4) on 8 stub devices)."""
     n = math.prod(shape)
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
     return jax.make_mesh(
-        shape, axes, axis_types=auto, devices=jax.devices()[:n]
+        shape, axes, devices=jax.devices()[:n], **_axis_types_kw(len(axes))
     )

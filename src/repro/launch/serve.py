@@ -1,7 +1,12 @@
-"""Production serving launcher: batched prefill + decode.
+"""Production serving launcher: continuous-batching prefill + decode.
 
     python -m repro.launch.serve --arch smollm-135m --requests 16 \
-        [--reduced] [--max-new 32]
+        [--reduced] [--max-new 32] [--mixed] [--sparce] [--eos-id N]
+
+--mixed draws per-request prompt lengths and decode budgets from a range
+(the continuous batcher's target workload); --sparce turns on the SparCE
+reference path for the serving MLPs and reports the realized tile-skip
+fraction.
 """
 from __future__ import annotations
 
@@ -22,40 +27,77 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed-length workload: prompt lengths and "
+                         "max_new budgets drawn per request")
+    ap.add_argument("--sparce", action="store_true",
+                    help="enable the SparCE reference path in serving "
+                         "MLPs (skip-fraction metrics)")
+    ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args(argv)
 
     import jax
 
     from repro.configs import get_config
+    from repro.core.sparse_ops import SparsityConfig
     from repro.models import model as model_lib
     from repro.runtime.server import Request, ServeConfig, Server
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    sparsity = None
+    if args.sparce:
+        # The paper's sparsity source is a ReLU-family MLP; swap the act
+        # BEFORE init (relu MLPs are 2-matrix, no w_gate).
+        import dataclasses
+        cfg = dataclasses.replace(cfg, mlp_act="relu")
+        # block_m=1: decode rows are slots, so per-row tiles make each
+        # freed slot's GEMM work individually skippable.
+        sparsity = SparsityConfig(
+            enabled=True, mode="reference", block_m=1, block_k=128,
+        )
     params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed))
     srv = Server(cfg, params, ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len,
-        temperature=args.temperature))
+        temperature=args.temperature, eos_id=args.eos_id,
+        seed=args.seed, sparsity=sparsity))
 
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
+        plen = args.prompt_len
+        max_new = args.max_new
+        if args.mixed:
+            plen = int(rng.integers(max(1, args.prompt_len // 2),
+                                    args.prompt_len + 1))
+            max_new = int(rng.integers(max(1, args.max_new // 4),
+                                       args.max_new + 1))
         if cfg.frontend == "codes":
-            prompt = rng.integers(
-                0, cfg.vocab_size, (cfg.num_codebooks, args.prompt_len))
+            prompt = rng.integers(0, cfg.vocab_size, (cfg.num_codebooks, plen))
         else:
-            prompt = rng.integers(0, cfg.vocab_size, args.prompt_len)
-        reqs.append(Request(uid=i, prompt=prompt, max_new=args.max_new))
+            prompt = rng.integers(0, cfg.vocab_size, plen)
+        reqs.append(Request(uid=i, prompt=prompt, max_new=max_new))
 
     t0 = time.perf_counter()
     done = srv.generate(reqs)
     dt = time.perf_counter() - t0
-    tok = srv.metrics["decode_tokens"]
-    print(f"served {len(done)} requests, {tok} decode tokens in {dt:.2f}s "
-          f"({tok / dt:.1f} tok/s)")
+    m = srv.metrics
+    tok = m["decode_tokens"]
+    print(f"served {len(done)} requests, {tok} decode tokens in "
+          f"{m['ticks']} ticks, {dt:.2f}s ({tok / max(dt, 1e-9):.1f} tok/s)")
+    occ = tok / max(1, m["ticks"] * args.batch_slots)
+    print(f"  slot occupancy {occ:.2f}, prefill {m['prefill_tokens']} tok "
+          f"/ {m['prefill_s']:.2f}s, decode {m['decode_s']:.2f}s")
+    if m["total_tile_dots"]:
+        print(f"  SparCE mlp_skip_fraction={m['mlp_skip_fraction']:.3f} "
+              f"({m['skipped_tile_dots']:.0f}/{m['total_tile_dots']:.0f} "
+              f"tile-dots)")
     for r in done[:3]:
-        print(f"  req {r.uid}: {list(map(int, np.asarray(r.out).flat[:12]))}")
+        s = r.stats
+        print(f"  req {r.uid}: ttft={s['ttft_s']*1e3:.1f}ms "
+              f"latency={s['latency_s']*1e3:.1f}ms tokens={int(s['tokens'])} "
+              f"out={list(map(int, np.asarray(r.out).flat[:8]))}")
     return done
 
 

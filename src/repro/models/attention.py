@@ -24,7 +24,27 @@ _NEG_INF = -1e30
 class KVCache(NamedTuple):
     k: jax.Array  # (B, L, KV, hd)  [GQA]  or ckv (B, L, kv_lora) [MLA]
     v: jax.Array  # (B, L, KV, hd)  [GQA]  or k_rope (B, L, rope) [MLA]
-    length: jax.Array  # int32 scalar: tokens already in cache
+    length: jax.Array  # int32 (B,): tokens already in cache, per slot
+
+
+def _slot_lengths(cache: KVCache, batch: int) -> jax.Array:
+    """Per-slot lengths (B,). Accepts legacy scalar-length caches."""
+    return jnp.broadcast_to(
+        jnp.asarray(cache.length, jnp.int32), (batch,)
+    )
+
+
+def _scatter_rows(buf: jax.Array, upd: jax.Array, starts: jax.Array) -> jax.Array:
+    """Write upd[b] into buf[b] at row offset starts[b].
+
+    buf: (B, L, ...), upd: (B, S, ...), starts: int32 (B,). The per-slot
+    start index is what makes continuous batching possible: every slot
+    advances through its own sequence independently.
+    """
+    zeros = (jnp.zeros((), jnp.int32),) * (buf.ndim - 2)
+    return jax.vmap(
+        lambda b, u, s: jax.lax.dynamic_update_slice(b, u, (s,) + zeros)
+    )(buf, upd.astype(buf.dtype), starts)
 
 
 # =============================================================== GQA / MHA
@@ -162,10 +182,12 @@ def gqa_forward(
         )
         new_cache = None
     elif S == 1:
-        # Decode: write k/v at cache.length, attend over the full cache.
-        idx = cache.length
-        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
+        # Decode: write k/v at each slot's own length, attend over that
+        # slot's live prefix. Per-slot indices are what let the server
+        # backfill a freed slot while its neighbours keep decoding.
+        idx = _slot_lengths(cache, B)  # (B,)
+        ck = _scatter_rows(cache.k, k, idx)
+        cv = _scatter_rows(cache.v, v, idx)
         L = ck.shape[1]
         g = h // kv
         qd = q.reshape(B, kv, g, hd)
@@ -173,21 +195,22 @@ def gqa_forward(
         s = jnp.einsum(
             "bkgd,blkd->bkgl", qd, ck, preferred_element_type=jnp.float32
         ) * (hd**-0.5)
-        valid = jnp.arange(L) <= idx
-        s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+        valid = jnp.arange(L)[None, :] <= idx[:, None]  # (B, L)
+        s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bkgl,blkd->bkgd", p.astype(cv.dtype), cv,
                        preferred_element_type=jnp.float32)
         out = o.reshape(B, 1, h, hd).astype(x.dtype)
         new_cache = KVCache(ck, cv, idx + 1)
     else:
-        # Prefill into cache.
-        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, cache.length, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, cache.length, 0, 0))
+        # Prefill into cache at each slot's current offset.
+        idx = _slot_lengths(cache, B)
+        ck = _scatter_rows(cache.k, k, idx)
+        cv = _scatter_rows(cache.v, v, idx)
         out = _flash_chunked(
             q, k, v, q_offset=0, chunk_q=min(chunk_q, S), chunk_k=min(chunk_k, S)
         )
-        new_cache = KVCache(ck, cv, cache.length + S)
+        new_cache = KVCache(ck, cv, idx + S)
 
     y = jnp.dot(out.reshape(B, S, h * hd), params["wo"])
     return y, new_cache
@@ -198,7 +221,7 @@ def gqa_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
     return KVCache(
         k=jnp.zeros((batch, max_len, kv, hd), dtype),
         v=jnp.zeros((batch, max_len, kv, hd), dtype),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -267,14 +290,15 @@ def mla_forward(
         )[..., :vd]
         new_cache = None
         if cache is not None:
-            cc = jax.lax.dynamic_update_slice(cache.k, ckv, (0, cache.length, 0))
-            cr = jax.lax.dynamic_update_slice(cache.v, kr, (0, cache.length, 0))
-            new_cache = KVCache(cc, cr, cache.length + S)
+            idx = _slot_lengths(cache, B)
+            cc = _scatter_rows(cache.k, ckv, idx)
+            cr = _scatter_rows(cache.v, kr, idx)
+            new_cache = KVCache(cc, cr, idx + S)
     else:
         # Absorbed decode: attention in the compressed latent space.
-        idx = cache.length
-        cc = jax.lax.dynamic_update_slice(cache.k, ckv, (0, idx, 0))
-        cr = jax.lax.dynamic_update_slice(cache.v, kr, (0, idx, 0))
+        idx = _slot_lengths(cache, B)  # (B,)
+        cc = _scatter_rows(cache.k, ckv, idx)
+        cr = _scatter_rows(cache.v, kr, idx)
         L = cc.shape[1]
         wuk = params["wuk"].reshape(m.kv_lora_rank, h, nope)
         # q_latent[b,h,r] = sum_n q_nope[b,h,n] * wuk[r,h,n]
@@ -289,8 +313,8 @@ def mla_forward(
             + jnp.einsum("bhr,blr->bhl", q_rope[:, 0], cr,
                          preferred_element_type=jnp.float32)
         ) * ((nope + rope_d) ** -0.5)
-        valid = jnp.arange(L) <= idx
-        s = jnp.where(valid[None, None, :], s, _NEG_INF)
+        valid = jnp.arange(L)[None, :] <= idx[:, None]  # (B, L)
+        s = jnp.where(valid[:, None, :], s, _NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         ctx_lat = jnp.einsum("bhl,blr->bhr", p.astype(cc.dtype), cc,
                              preferred_element_type=jnp.float32)
@@ -309,5 +333,5 @@ def mla_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
     return KVCache(
         k=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
         v=jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
     )

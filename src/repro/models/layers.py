@@ -12,7 +12,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import sasa, sparse_ops, sprf
+from repro.core import sparse_ops, sprf
 from repro.models import modules as nn
 
 
@@ -77,24 +77,31 @@ def _activate(
 
 def mlp_fwd(
     params, x: jax.Array, act: str, scfg: sparse_ops.SparsityConfig
-) -> jax.Array:
-    """x: (..., d). SparCE path: relu-family act -> bitmap -> gated w_out."""
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (..., d). SparCE path: relu-family act -> bitmap -> gated w_out.
+
+    Returns (y, skip_stats) where skip_stats is f32[2] =
+    [skipped_tile_dots, total_tile_dots] of the down-projection GEMM
+    (zeros when the SparCE path is off) -- the per-layer accounting the
+    serving engine aggregates into ``mlp_skip_fraction``.
+    """
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
+    no_stats = jnp.zeros((2,), jnp.float32)
     h = jnp.dot(x2, params["w_in"])
     if act in ("silu", "gelu"):
         a, _ = _activate(h, act, scfg)
         a = a * jnp.dot(x2, params["w_gate"])
         y = jnp.dot(a, params["w_out"])
-        return y.reshape(shape)
+        return y.reshape(shape), no_stats
     a, bmp = _activate(h, act, scfg)
     if scfg.enabled and bmp is not None and scfg.gate_activations:
-        plan = sasa.SkipPlan(
-            gate="lhs",
-            variant="gated",
-            block_m=scfg.block_m, block_k=scfg.block_k, block_n=scfg.block_n,
-        )
-        y = sparse_ops.sparce_matmul(a, params["w_out"], scfg, plan, lhs_bitmap=bmp)
+        # plan=None + lhs bitmap: sparce_matmul pulls the memoised
+        # gated-lhs plan from the process-level SASA cache.
+        n = params["w_out"].shape[-1]
+        y = sparse_ops.sparce_matmul(a, params["w_out"], scfg, lhs_bitmap=bmp)
+        stats = sparse_ops.gemm_skip_stats(bmp, n, scfg.block_n)
     else:
         y = jnp.dot(a, params["w_out"])
-    return y.reshape(shape)
+        stats = no_stats
+    return y.reshape(shape), stats

@@ -10,6 +10,7 @@ Targets are ``tokens`` shifted left by one inside the loss.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -87,33 +88,38 @@ def _embed(params, cfg: ArchConfig, tokens: jax.Array,
     return x
 
 
-def _backbone(params, cfg: ArchConfig, x, positions, caches):
+def _backbone(params, cfg: ArchConfig, x, positions, caches, active=None):
     if cfg.family == "ssm":
         return tfm.stack_fwd(params["stack"], x, positions, cfg, "ssm",
-                             None if caches is None else caches["stack"])
+                             None if caches is None else caches["stack"],
+                             active=active)
     if cfg.family == "hybrid":
         x, nc, aux = tfm.hybrid_fwd(
             params["hybrid"], x, positions, cfg,
             None if caches is None else caches["hybrid"],
+            active=active,
         )
         return x, (None if nc is None else nc), aux
     if cfg.family == "moe":
-        aux_total = jnp.zeros((), jnp.float32)
+        aux_total = tfm.aux_zero()
         new_caches: Dict[str, Any] = {}
         if cfg.first_k_dense:
             dc = None if caches is None else caches["dense_stack"]
             x, ndc, aux = tfm.stack_fwd(
-                params["dense_stack"], x, positions, cfg, "dense", dc
+                params["dense_stack"], x, positions, cfg, "dense", dc,
+                active=active,
             )
-            aux_total += aux
+            aux_total = tfm.aux_add(aux_total, aux)
             new_caches["dense_stack"] = ndc
         mc = None if caches is None else caches["stack"]
-        x, nmc, aux = tfm.stack_fwd(params["stack"], x, positions, cfg, "moe", mc)
-        aux_total += aux
+        x, nmc, aux = tfm.stack_fwd(params["stack"], x, positions, cfg, "moe",
+                                    mc, active=active)
+        aux_total = tfm.aux_add(aux_total, aux)
         new_caches["stack"] = nmc
         return x, new_caches, aux_total
     sc = None if caches is None else caches["stack"]
-    return tfm.stack_fwd(params["stack"], x, positions, cfg, "dense", sc)
+    return tfm.stack_fwd(params["stack"], x, positions, cfg, "dense", sc,
+                         active=active)
 
 
 def _normalize_backbone_caches(cfg, new_caches):
@@ -141,21 +147,34 @@ def forward(
     params, cfg: ArchConfig, batch: Dict[str, jax.Array],
     caches: Optional[Dict[str, Any]] = None,
     *, last_only: bool = False,
-) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
-    """Full-sequence forward. Returns (logits, new_caches, aux_loss).
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], Dict[str, jax.Array]]:
+    """Full-sequence forward. Returns (logits, new_caches, aux).
+
+    aux is the pytree {'loss': router aux loss, 'skip': f32[2] SparCE
+    tile-dot accounting [skipped, total]} summed over layers.
 
     last_only=True computes logits for the final position only (prefill
     serving path: avoids materializing the (B, S, V) logits tensor).
+
+    batch['active'] (f32 (B,), optional) is the serving engine's live-slot
+    mask: embeddings of inactive slots are zeroed, so with a ReLU-family
+    MLP their activation rows are all-zero tiles and the SparCE bitmap
+    path skips their GEMM work -- freed slots cost no MXU tile-dots.
     """
     tokens = batch["tokens"]
     x = _embed(params, cfg, tokens, batch.get("patch_embeds"))
+    active = batch.get("active")
+    if active is not None:
+        x = x * active.astype(x.dtype)[:, None, None]
     B, S = x.shape[0], x.shape[1]
     offset = jnp.zeros((), jnp.int32)
     if caches is not None:
         offset = _cache_length(cfg, caches)
-    positions = offset + jnp.arange(S, dtype=jnp.int32)[None, :]
-    positions = jnp.broadcast_to(positions, (B, S))
-    x, new_caches, aux = _backbone(params, cfg, x, positions, caches)
+    # Per-slot offsets: each serving slot sits at its own sequence depth.
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (B,))
+    positions = offset[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    x, new_caches, aux = _backbone(params, cfg, x, positions, caches,
+                                   active=active)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if last_only:
         x = x[:, -1:]
@@ -173,7 +192,7 @@ def _cache_length(cfg, caches):
         return leaf["attn"].length[0]
     if cfg.family == "ssm":
         return jnp.zeros((), jnp.int32)  # ssm cache has no positions
-    return leaf.length[0]  # stacked over layers -> take layer 0
+    return leaf.length[0]  # stacked over layers -> take layer 0: (B,)
 
 
 # -------------------------------------------------------------------- loss
@@ -205,8 +224,8 @@ def loss_fn(
         if "loss_mask" in batch:
             mask = batch["loss_mask"][:, 1:].astype(ll.dtype)
         loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-    total = loss + aux
-    return total, {"loss": loss, "aux_loss": aux, "total_loss": total}
+    total = loss + aux["loss"]
+    return total, {"loss": loss, "aux_loss": aux["loss"], "total_loss": total}
 
 
 # ---------------------------------------------------------- prefill/decode
@@ -242,3 +261,50 @@ def decode_step(params, cfg: ArchConfig, last_tokens, caches):
     batch = {"tokens": last_tokens}
     logits, new_caches, _ = forward(params, cfg, batch, caches)
     return logits, new_caches
+
+
+def serving_decode_step(params, cfg: ArchConfig, last_tokens, caches, active):
+    """Continuous-batching decode tick.
+
+    last_tokens: (B, 1) or (B, K, 1); active: f32 (B,) live-slot mask.
+    Returns (logits, new_caches, skip_stats) with skip_stats = f32[2]
+    [skipped_tile_dots, total_tile_dots] summed over the MLP GEMMs of
+    this step -- the realized SparCE skip work, surfaced by the server.
+    """
+    batch = {"tokens": last_tokens, "active": active}
+    logits, new_caches, aux = forward(params, cfg, batch, caches)
+    return logits, new_caches, aux["skip"]
+
+
+@functools.partial(jax.jit, static_argnames=("slot",), donate_argnums=(0,))
+def insert_slot_caches(big, small, slot: int):
+    """Scatter a freshly prefilled single-request cache into slot ``slot``.
+
+    ``small`` must come from the same (cfg, max_len) with batch=1; the two
+    trees differ only in the batch axis of every leaf (including the
+    per-slot ``length`` vectors), so the batch axis is identified
+    structurally and the slot row is overwritten in place. This is the
+    admission path of the continuous batcher: a freed slot is reloaded
+    without touching its neighbours' caches. The big cache is donated so
+    XLA updates it in place instead of copying O(layers * B * max_len)
+    per admission.
+    """
+
+    def one(b, s):
+        if b.shape == s.shape:  # batch_slots == 1: whole-tree replace
+            return s.astype(b.dtype)
+        diff = [i for i, (db, ds) in enumerate(zip(b.shape, s.shape))
+                if db != ds]
+        if len(diff) != 1 or s.shape[diff[0]] != 1:
+            raise ValueError(
+                f"cache leaves differ beyond the batch axis: {b.shape} vs "
+                f"{s.shape}"
+            )
+        ax = diff[0]
+        start = [0] * b.ndim
+        start[ax] = slot
+        return jax.lax.dynamic_update_slice(
+            b, s.astype(b.dtype), tuple(start)
+        )
+
+    return jax.tree_util.tree_map(one, big, small)

@@ -36,6 +36,22 @@ def _dt(cfg: ArchConfig):
     return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
 
 
+# ------------------------------------------------------------- aux plumbing
+# Every block contributes an aux pytree: router load-balance loss plus the
+# SparCE tile-skip accounting of its MLP GEMMs. Carried through the layer
+# scans so the serving engine can surface realized skip fractions without
+# re-reading activations.
+def aux_zero() -> dict:
+    return {
+        "loss": jnp.zeros((), jnp.float32),
+        "skip": jnp.zeros((2,), jnp.float32),  # [skipped, total] tile-dots
+    }
+
+
+def aux_add(a: dict, b: dict) -> dict:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
 # ------------------------------------------------------------------ blocks
 def block_init(key, cfg: ArchConfig, kind: str):
     dtype = _dt(cfg)
@@ -64,29 +80,45 @@ def block_init(key, cfg: ArchConfig, kind: str):
 
 def block_fwd(
     params, x, positions, cfg: ArchConfig, kind: str,
-    cache=None,
-) -> Tuple[jax.Array, Any, jax.Array]:
-    """Returns (x, new_cache, aux_loss)."""
-    aux = jnp.zeros((), jnp.float32)
+    cache=None, active=None,
+) -> Tuple[jax.Array, Any, dict]:
+    """Returns (x, new_cache, aux) with aux = {'loss', 'skip'}.
+
+    ``active`` (f32 (B,), serving only) gates every residual delta: a
+    dead slot's mixer output is zeroed so its residual stream stays
+    identically zero through the stack. With the embedding also zeroed,
+    a dead slot's MLP activations are all-zero tiles and the SparCE
+    bitmap path skips their GEMM work -- attention over the (garbage)
+    cache would otherwise re-inject nonzeros into the dead rows.
+    """
+
+    def gate(h):
+        if active is None:
+            return h
+        return h * active.astype(h.dtype)[:, None, None]
+
+    aux = aux_zero()
     if kind == "ssm":
         h, new_cache = ssm_lib.mamba2_forward(
             params["mixer"], rmsnorm(params["norm"], x, cfg.norm_eps), cfg,
             cache=cache,
         )
-        return x + h, new_cache, aux
+        return x + gate(h), new_cache, aux
 
     attn_fn = mla_forward if cfg.mla is not None else gqa_forward
     h, new_cache = attn_fn(
         params["attn"], rmsnorm(params["attn_norm"], x, cfg.norm_eps),
         positions, cfg, cache=cache,
     )
-    x = x + h
+    x = x + gate(h)
     hn = rmsnorm(params["mlp_norm"], x, cfg.norm_eps)
     if kind == "moe":
-        h, aux, _occ = moe_lib.moe_forward(params["moe"], hn, cfg)
+        h, moe_aux, _occ = moe_lib.moe_forward(params["moe"], hn, cfg)
+        aux["loss"] = aux["loss"] + moe_aux
     else:
-        h = mlp_fwd(params["mlp"], hn, cfg.mlp_act, cfg.sparsity)
-    return x + h, new_cache, aux
+        h, skip = mlp_fwd(params["mlp"], hn, cfg.mlp_act, cfg.sparsity)
+        aux["skip"] = aux["skip"] + skip
+    return x + gate(h), new_cache, aux
 
 
 # ------------------------------------------------------------------ stacks
@@ -109,6 +141,7 @@ def _maybe_remat(fn, cfg: ArchConfig):
 
 def stack_fwd(
     stacked, x, positions, cfg: ArchConfig, kind: str, caches=None,
+    active=None,
 ):
     """Scan over layers (scan_layers=True, compact HLO for 61-81 layer
     stacks) or unrolled python loop (scan_layers=False -- used by the
@@ -120,7 +153,8 @@ def stack_fwd(
         h, aux = carry
         layer_params, layer_cache = xs
         h, new_cache, a = block_fwd(
-            layer_params, h, positions, cfg, kind, cache=layer_cache
+            layer_params, h, positions, cfg, kind, cache=layer_cache,
+            active=active,
         )
         if cfg.seq_shard and h.ndim == 3 and h.shape[1] > 1:
             # Megatron-style sequence parallelism between blocks: the
@@ -128,13 +162,13 @@ def stack_fwd(
             # all-gathers the (small) kv projections inside attention
             # while every norm/residual/elementwise op runs 1/TP-sized.
             h = constrain(h, P(("pod", "data"), "model", None))
-        return (h, aux + a), new_cache
+        return (h, aux_add(aux, a)), new_cache
 
     body = _maybe_remat(body, cfg)
 
     if not cfg.scan_layers:
         n_layers = jax.tree_util.tree_leaves(stacked)[0].shape[0]
-        aux = jnp.zeros((), jnp.float32)
+        aux = aux_zero()
         new_caches = []
         tm = jax.tree_util.tree_map
         for i in range(n_layers):
@@ -150,12 +184,12 @@ def stack_fwd(
     if caches is None:
         (x, aux), _ = jax.lax.scan(
             lambda c, p: body(c, (p, None)),
-            (x, jnp.zeros((), jnp.float32)),
+            (x, aux_zero()),
             stacked,
         )
         return x, None, aux
     (x, aux), new_caches = jax.lax.scan(
-        body, (x, jnp.zeros((), jnp.float32)), (stacked, caches)
+        body, (x, aux_zero()), (stacked, caches)
     )
     return x, new_caches, aux
 
@@ -198,7 +232,8 @@ def hybrid_init(key, cfg: ArchConfig):
     return p
 
 
-def hybrid_fwd(params, x, positions, cfg: ArchConfig, caches=None):
+def hybrid_fwd(params, x, positions, cfg: ArchConfig, caches=None,
+               active=None):
     """caches: dict(ssm=(n_super, every, ...), attn=(n_super, ...),
     trailing=(trailing, ...))."""
     every = cfg.attn_every
@@ -210,18 +245,19 @@ def hybrid_fwd(params, x, positions, cfg: ArchConfig, caches=None):
         h, aux = carry
         group_params, group_caches = xs
         ssm_c = None if group_caches is None else group_caches["ssm"]
-        h, new_ssm, a1 = stack_fwd(group_params, h, positions, cfg, "ssm", ssm_c)
+        h, new_ssm, a1 = stack_fwd(group_params, h, positions, cfg, "ssm",
+                                   ssm_c, active=active)
         attn_c = None if group_caches is None else group_caches["attn"]
         h, new_attn, a2 = block_fwd(
-            shared, h, positions, cfg, "dense", cache=attn_c
+            shared, h, positions, cfg, "dense", cache=attn_c, active=active
         )
         new_c = None if group_caches is None else {"ssm": new_ssm, "attn": new_attn}
-        return (h, aux + a1 + a2), new_c
+        return (h, aux_add(aux_add(aux, a1), a2)), new_c
 
     super_body = _maybe_remat(super_body, cfg)
     tm = jax.tree_util.tree_map
     if not cfg.scan_layers:
-        aux = jnp.zeros((), jnp.float32)
+        aux = aux_zero()
         outs = []
         for i in range(n_super):
             gp = tm(lambda a: a[i], params["groups"])
@@ -239,13 +275,13 @@ def hybrid_fwd(params, x, positions, cfg: ArchConfig, caches=None):
     elif caches is None:
         (x, aux), _ = jax.lax.scan(
             lambda c, p: super_body(c, (p, None)),
-            (x, jnp.zeros((), jnp.float32)),
+            (x, aux_zero()),
             params["groups"],
         )
         new_caches = None
     else:
         (x, aux), new_group_caches = jax.lax.scan(
-            super_body, (x, jnp.zeros((), jnp.float32)),
+            super_body, (x, aux_zero()),
             (params["groups"], {"ssm": caches["ssm"], "attn": caches["attn"]}),
         )
         new_caches = {
@@ -255,9 +291,9 @@ def hybrid_fwd(params, x, positions, cfg: ArchConfig, caches=None):
     if trailing:
         tc = None if caches is None else caches["trailing"]
         x, new_trail, a = stack_fwd(
-            params["trailing"], x, positions, cfg, "ssm", tc
+            params["trailing"], x, positions, cfg, "ssm", tc, active=active
         )
-        aux = aux + a
+        aux = aux_add(aux, a)
         if caches is not None:
             new_caches["trailing"] = new_trail
     return x, new_caches, aux

@@ -148,7 +148,11 @@ def cache_spec(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
     def one(path, leaf):
         name = _leaf_name(path)
         spec = [None] * leaf.ndim
-        if leaf.ndim <= 1:  # length scalars per layer
+        if leaf.ndim <= 1:  # legacy scalar lengths per layer
+            return P(*spec)
+        if name.endswith("length"):  # (layers, B) per-slot lengths
+            if shape.global_batch % dp == 0 and leaf.shape[-1] == shape.global_batch:
+                spec[-1] = data_axes
             return P(*spec)
         # leading dim(s) are layer stacks; find batch dim = first dim
         # whose size == global batch.
@@ -165,7 +169,8 @@ def cache_spec(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
                     leaf.shape[b_dim + 2], mesh, "model"
                 ):
                     spec[b_dim + 2] = "model"
-            if name.endswith("h") and _div(leaf.shape[b_dim + 1], mesh, "model"):
+            if (name.split("/")[-1] == "h" and leaf.ndim >= b_dim + 2
+                    and _div(leaf.shape[b_dim + 1], mesh, "model")):
                 spec[b_dim + 1] = "model"
             return P(*spec)
         # batch too small: SP on the sequence axis (attention caches) or

@@ -1,15 +1,36 @@
-"""Batched serving: prefill + decode with a fixed-slot continuous batcher.
+"""Continuous-batching serving engine with SparCE skip integration.
 
-``Server`` keeps B decode slots. Requests (prompts) are admitted into
-free slots in prefill batches; every engine tick runs one fused decode
-step for all active slots. Finished sequences (EOS or budget) free their
-slot. This is the standard TPU-serving shape: one jitted decode_step,
-(B, 1) tokens, layer-stacked KV caches, per-slot lengths.
+``Server`` keeps ``batch_slots`` decode slots over ONE shared, layer-
+stacked KV/SSM cache with per-slot lengths. The engine loop is:
+
+  1. admission -- while a slot is free and requests are pending, prefill
+     the next request alone (batch=1, exact prompt length, logits for the
+     last position only) and scatter its cache into the free slot
+     (:func:`model.insert_slot_caches`); its first token is sampled from
+     the prefill logits.
+  2. decode tick -- ONE jitted :func:`model.serving_decode_step` for all
+     slots, threading the active-slot mask through the model. Inactive
+     slots' embeddings are zeroed, so under a ReLU-family MLP their
+     activation rows are all-zero tiles and the SparCE bitmap path skips
+     their GEMM tile-dots: a freed slot costs no MXU work, which is the
+     paper's dynamic zero-operand skipping applied to the serving hot
+     path. ``decode_tokens`` counts only live slots.
+  3. release -- a slot is freed the moment its request hits EOS or its
+     own ``max_new`` budget, and the next pending request backfills it on
+     the same engine iteration. No slot ever idles through another
+     request's tail.
+
+Sampling is vectorized (Gumbel-max over the whole slot batch; greedy is
+pure argmax), so there is no per-row Python sampling loop. The server
+reports engine metrics (ticks, active-token counts, realized MLP
+tile-skip fraction from the SASA accounting) and per-request latency /
+throughput.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -17,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.sparse_ops import SparsityConfig
 from repro.models import model as model_lib
 
 
@@ -25,7 +47,10 @@ class Request:
     uid: int
     prompt: np.ndarray  # (S,) or (K, S) for audio
     max_new: int = 32
+    eos_id: Optional[int] = None  # overrides ServeConfig.eos_id
     out: Optional[np.ndarray] = None
+    # Filled by the engine: ttft_s, latency_s, tokens, decode_ticks.
+    stats: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -33,79 +58,217 @@ class ServeConfig:
     batch_slots: int = 8
     max_len: int = 512
     temperature: float = 0.0  # 0 => greedy
+    eos_id: Optional[int] = None
+    seed: int = 0
+    # SparCE integration for the serving path: when set, it replaces
+    # cfg.sparsity for prefill+decode so the MLP GEMMs run sparce_matmul
+    # with producer-fused ReLU bitmaps (and dead-slot rows skip).
+    sparsity: Optional[SparsityConfig] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    produced: List[np.ndarray]
+    t_admit: float
+    t_first: float
+    ticks: int = 0
 
 
 class Server:
+    """Fixed-slot continuous batcher: per-slot admission, budgets, release."""
+
     def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig):
+        if serve_cfg.sparsity is not None:
+            cfg = dataclasses.replace(cfg, sparsity=serve_cfg.sparsity)
         self.cfg, self.params, self.sc = cfg, params, serve_cfg
         self._decode = jax.jit(
-            lambda p, toks, caches: model_lib.decode_step(p, cfg, toks, caches)
+            lambda p, toks, caches, active: model_lib.serving_decode_step(
+                p, cfg, toks, caches, active
+            )
         )
-        self._prefill = jax.jit(
-            lambda p, batch: model_lib.prefill(p, cfg, batch, serve_cfg.max_len)
-        )
+        def _prefill_fn(p, batch):
+            caches = model_lib.init_caches(cfg, 1, serve_cfg.max_len)
+            logits, new_caches, aux = model_lib.forward(
+                p, cfg, batch, caches, last_only=True
+            )
+            # aux['skip'] rides along so prefill GEMMs count toward the
+            # skip metrics too, not just decode ticks.
+            return logits, new_caches, aux["skip"]
+
+        self._prefill = jax.jit(_prefill_fn)
+        self._rng = np.random.default_rng(serve_cfg.seed)
         self.metrics: Dict[str, float] = {
             "prefill_tokens": 0, "decode_tokens": 0, "ticks": 0,
+            "admitted": 0, "completed": 0,
+            "skipped_tile_dots": 0.0, "total_tile_dots": 0.0,
+            "mlp_skip_fraction": 0.0,
+            "prefill_s": 0.0, "decode_s": 0.0,
         }
 
+    # ------------------------------------------------------------ sampling
     def _sample(self, logits: np.ndarray) -> np.ndarray:
+        """Vectorized sampling over (..., V): greedy or Gumbel-max."""
         if self.sc.temperature <= 0:
             return np.argmax(logits, axis=-1)
-        z = logits / self.sc.temperature
-        z = z - z.max(-1, keepdims=True)
-        p = np.exp(z)
-        p /= p.sum(-1, keepdims=True)
-        flat = p.reshape(-1, p.shape[-1])
-        idx = np.array(
-            [np.random.choice(p.shape[-1], p=row) for row in flat]
-        )
-        return idx.reshape(p.shape[:-1])
+        z = logits.astype(np.float64) / self.sc.temperature
+        u = self._rng.random(z.shape)
+        g = -np.log(-np.log(np.clip(u, 1e-12, 1.0)))
+        return np.argmax(z + g, axis=-1)
+
+    # ----------------------------------------------------------- admission
+    def _prefill_one(self, r: Request, slot: int, caches):
+        """Prefill one request alone and scatter it into ``slot``."""
+        cfg = self.cfg
+        prompt = np.asarray(r.prompt)
+        S = int(prompt.shape[-1])
+        if cfg.frontend == "codes":
+            toks = prompt.reshape(1, cfg.num_codebooks, S).astype(np.int32)
+        else:
+            toks = prompt.reshape(1, S).astype(np.int32)
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.frontend == "patches":
+            batch["patch_embeds"] = jnp.zeros(
+                (1, cfg.num_patches, cfg.d_model),
+                jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32,
+            )
+        t0 = time.perf_counter()
+        logits, small, skip = self._prefill(self.params, batch)
+        caches = model_lib.insert_slot_caches(caches, small, slot)
+        self.metrics["prefill_s"] += time.perf_counter() - t0
+        self.metrics["prefill_tokens"] += S
+        self.metrics["admitted"] += 1
+        skip = np.asarray(skip, np.float64)
+        self.metrics["skipped_tile_dots"] += float(skip[0])
+        self.metrics["total_tile_dots"] += float(skip[1])
+        # last_only logits: (1, 1, V) or (1, 1, K, V) for codes.
+        last = np.asarray(logits[0, 0], np.float32)  # (V,) or (K, V)
+        return last, caches
+
+    def _finish(self, slot_state: _Slot, t_now: float):
+        r = slot_state.req
+        out = np.array(slot_state.produced[: r.max_new])
+        r.out = out
+        r.stats = {
+            "ttft_s": slot_state.t_first - slot_state.t_admit,
+            "latency_s": t_now - slot_state.t_admit,
+            "tokens": float(len(out)),
+            "decode_ticks": float(slot_state.ticks),
+        }
+        self.metrics["completed"] += 1
+
+    def _hit_eos(self, r: Request, tok: np.ndarray) -> bool:
+        eos = r.eos_id if r.eos_id is not None else self.sc.eos_id
+        if eos is None:
+            return False
+        if self.cfg.frontend == "codes":
+            return bool(np.all(tok == eos))
+        return int(tok) == eos
+
+    # -------------------------------------------------------------- engine
+    def _validate(self, requests: List[Request]) -> None:
+        """Reject requests that cannot fit a cache slot BEFORE admitting
+        any: a slot holds prompt + decoded tokens contiguously (no KV
+        paging yet), and decode writes past max_len would silently clamp
+        onto the last cache row."""
+        for r in requests:
+            need = int(np.asarray(r.prompt).shape[-1]) + max(1, r.max_new)
+            if need > self.sc.max_len:
+                raise ValueError(
+                    f"request uid={r.uid}: prompt + max_new = {need} "
+                    f"tokens do not fit a max_len={self.sc.max_len} cache "
+                    "slot; raise ServeConfig.max_len or lower max_new"
+                )
 
     def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve a list of requests in slot batches."""
+        """Serve requests through the continuous-batching engine."""
         cfg, sc = self.cfg, self.sc
+        self._validate(requests)
+        B = sc.batch_slots
+        caches = model_lib.init_caches(cfg, B, sc.max_len)
+        pending = deque(requests)
+        slots: List[Optional[_Slot]] = [None] * B
+        if cfg.frontend == "codes":
+            cur_tok = np.zeros((B, cfg.num_codebooks), np.int32)
+        else:
+            cur_tok = np.zeros((B,), np.int32)
         done: List[Request] = []
-        queue = list(requests)
-        while queue:
-            batch_reqs = queue[: sc.batch_slots]
-            queue = queue[len(batch_reqs):]
-            B = len(batch_reqs)
-            S = max(len(r.prompt[-1]) if r.prompt.ndim > 1 else len(r.prompt)
-                    for r in batch_reqs)
-            if cfg.frontend == "codes":
-                toks = np.zeros((B, cfg.num_codebooks, S), np.int32)
-                for i, r in enumerate(batch_reqs):
-                    toks[i, :, : r.prompt.shape[-1]] = r.prompt
-            else:
-                toks = np.zeros((B, S), np.int32)
-                for i, r in enumerate(batch_reqs):
-                    toks[i, : len(r.prompt)] = r.prompt
-            batch = {"tokens": jnp.asarray(toks)}
-            if cfg.frontend == "patches":
-                batch["patch_embeds"] = jnp.zeros(
-                    (B, cfg.num_patches, cfg.d_model),
-                    jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32,
+
+        def release(i: int):
+            self._finish(slots[i], time.perf_counter())
+            done.append(slots[i].req)
+            slots[i] = None
+
+        while pending or any(s is not None for s in slots):
+            # 1. Admission: backfill every free slot from the queue.
+            for i in range(B):
+                if slots[i] is not None or not pending:
+                    continue
+                r = pending.popleft()
+                t0 = time.perf_counter()
+                last_logits, caches = self._prefill_one(r, i, caches)
+                first = self._sample(last_logits)  # () or (K,)
+                slots[i] = _Slot(
+                    req=r, produced=[np.asarray(first)],
+                    t_admit=t0, t_first=time.perf_counter(),
                 )
-            logits, caches = self._prefill(self.params, batch)
-            self.metrics["prefill_tokens"] += B * S
-            last_logits = np.asarray(logits[:, -1], np.float32)
-            outs = [[] for _ in range(B)]
-            max_new = max(r.max_new for r in batch_reqs)
-            for t in range(max_new):
-                nxt = self._sample(last_logits)  # (B,) or (B, K)
-                for i in range(B):
-                    if t < batch_reqs[i].max_new:
-                        outs[i].append(nxt[i])
-                if cfg.frontend == "codes":
-                    step_toks = jnp.asarray(nxt, jnp.int32)[..., None]  # (B,K,1)
-                else:
-                    step_toks = jnp.asarray(nxt, jnp.int32)[:, None]  # (B,1)
-                logits, caches = self._decode(self.params, step_toks, caches)
-                self.metrics["decode_tokens"] += B
-                self.metrics["ticks"] += 1
-                last_logits = np.asarray(logits[:, -1] if cfg.frontend != "codes"
-                                         else logits[:, 0], np.float32)
-            for i, r in enumerate(batch_reqs):
-                r.out = np.array(outs[i][: r.max_new])
-                done.append(r)
+                cur_tok[i] = first
+                if len(slots[i].produced) >= r.max_new or self._hit_eos(
+                        r, np.asarray(first)):
+                    release(i)  # budget of 1 / instant EOS: free for reuse
+
+            active = np.array(
+                [s is not None for s in slots], np.float32
+            )
+            n_active = int(active.sum())
+            if n_active == 0:
+                if pending:
+                    continue  # slots freed during admission: re-admit
+                break
+
+            # 2. One fused decode tick for all slots (dead slots masked).
+            step = np.where(
+                active.astype(bool)[:, None] if cur_tok.ndim > 1
+                else active.astype(bool),
+                cur_tok, 0,
+            ).astype(np.int32)
+            if cfg.frontend == "codes":
+                step_toks = jnp.asarray(step)[..., None]  # (B, K, 1)
+            else:
+                step_toks = jnp.asarray(step)[:, None]  # (B, 1)
+            t0 = time.perf_counter()
+            logits, caches, skip = self._decode(
+                self.params, step_toks, caches, jnp.asarray(active)
+            )
+            self.metrics["decode_s"] += time.perf_counter() - t0
+            self.metrics["ticks"] += 1
+            self.metrics["decode_tokens"] += n_active
+            skip = np.asarray(skip, np.float64)
+            self.metrics["skipped_tile_dots"] += float(skip[0])
+            self.metrics["total_tile_dots"] += float(skip[1])
+
+            last = np.asarray(
+                logits[:, -1] if cfg.frontend != "codes" else logits[:, 0],
+                np.float32,
+            )
+            nxt = self._sample(last)  # (B,) or (B, K)
+
+            # 3. Per-slot bookkeeping + immediate release on EOS/budget.
+            for i in range(B):
+                s = slots[i]
+                if s is None:
+                    continue
+                tok = np.asarray(nxt[i])
+                s.produced.append(tok)
+                s.ticks += 1
+                cur_tok[i] = tok
+                if len(s.produced) >= s.req.max_new or self._hit_eos(
+                        s.req, tok):
+                    release(i)
+
+        if self.metrics["total_tile_dots"] > 0:
+            self.metrics["mlp_skip_fraction"] = (
+                self.metrics["skipped_tile_dots"]
+                / self.metrics["total_tile_dots"]
+            )
         return done

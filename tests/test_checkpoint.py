@@ -67,12 +67,11 @@ def test_elastic_restore_different_mesh(tmp_path):
     (simulated here with single-device shardings; the 8-device version
     runs in tests/test_distributed.py)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh
     t = _tree(jax.random.PRNGKey(4))
     ckpt.save(str(tmp_path), 1, t)
-    mesh = jax.make_mesh(
-        (1,), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,),
-        devices=jax.devices()[:1])
+    mesh = make_mesh((1,), ("data",))
     sh = jax.tree_util.tree_map(
         lambda _: NamedSharding(mesh, P()), t)
     restored, _, _ = ckpt.restore(str(tmp_path), t, shardings=sh)

@@ -94,6 +94,45 @@ def test_analyze_network_counts_plans():
     assert rep["distinct_plans"] <= len(ALEXNET_GEMMS)
 
 
+# -------------------------------------------------------------- plan cache
+def test_plan_cache_identical_to_uncached():
+    sasa.plan_cache_clear()
+    shapes = [(512, 1024, 512, 0.5, 0.0), (256, 512, 1024, 0.0, 0.75),
+              (4096, 8192, 4096, 0.5, 0.5)]
+    for (m, k, n, ls, rs) in shapes:
+        cached = sasa.plan_matmul_cached(
+            m, k, n, lhs_sparsity=ls, rhs_sparsity=rs,
+            lhs_cluster=64 * 128, rhs_cluster=128 * 128)
+        direct = sasa.plan_matmul(
+            m, k, n, lhs_sparsity=ls, rhs_sparsity=rs,
+            lhs_cluster=64 * 128, rhs_cluster=128 * 128)
+        assert cached == direct, (cached, direct)
+    stats = sasa.plan_cache_stats()
+    assert stats["misses"] == len(shapes) and stats["hits"] == 0
+
+
+def test_plan_cache_hits_on_repeat_and_sparsity_bucket():
+    sasa.plan_cache_clear()
+    a = sasa.plan_matmul_cached(512, 1024, 512, lhs_sparsity=0.5)
+    b = sasa.plan_matmul_cached(512, 1024, 512, lhs_sparsity=0.5)
+    assert a is b
+    # Within one 1/64 bucket -> same cache entry (no re-planning).
+    c = sasa.plan_matmul_cached(512, 1024, 512, lhs_sparsity=0.5 + 1e-4)
+    assert c is a
+    assert sasa.plan_cache_stats()["hits"] == 2
+
+
+def test_bitmap_gated_plan_is_memoised():
+    sasa.plan_cache_clear()
+    p1 = sasa.bitmap_gated_plan(64, 128, 64, block_m=8, block_k=128,
+                                block_n=128)
+    p2 = sasa.bitmap_gated_plan(64, 128, 64, block_m=8, block_k=128,
+                                block_n=128)
+    assert p1 is p2
+    assert p1.gate == "lhs" and p1.variant == "gated"
+    assert sasa.plan_cache_stats() == {"size": 1, "hits": 1, "misses": 1}
+
+
 # ------------------------------------------------------------- sparse_ops
 def test_sparce_matmul_honest_bitmap_is_exact():
     cfg = so.SparsityConfig(enabled=True, mode="reference")

@@ -7,6 +7,10 @@ import sys
 
 import pytest
 
+# Subprocess compiles on stub device meshes: minutes each on a CPU
+# runner. Nightly / 'run-slow'-labeled tier only.
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 SRC = os.path.join(ROOT, "src")
 

@@ -43,7 +43,9 @@ def test_reduced_forward_shapes_and_finite(arch):
     else:
         assert logits.shape == (B, S, cfg.vocab_size)
     assert np.all(np.isfinite(np.asarray(logits, np.float32)))
-    assert np.isfinite(float(aux))
+    # aux pytree: router load-balance loss + SparCE tile-skip accounting.
+    assert np.isfinite(float(aux["loss"]))
+    assert aux["skip"].shape == (2,)
 
 
 @pytest.mark.parametrize("arch", ARCH_NAMES)

@@ -2,7 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+# Hypothesis sweeps over interpret-mode Pallas kernels: nightly tier.
+pytestmark = pytest.mark.slow
 
 from repro.core import cost_model as cm
 from repro.core import sasa, sprf
