@@ -1,0 +1,81 @@
+"""CI gate: fail when the fused MLP's modeled HBM bytes regress.
+
+Usage:
+    python benchmarks/check_bench_regression.py BENCH_mlp.json \
+        benchmarks/baselines/mlp_baseline.json
+
+Compares only the DETERMINISTIC fields (modeled HBM bytes from the cost
+model at the measured sparsity, and the tile-dot skip counts) -- wall
+times are recorded in the JSON for trajectory tracking but never gated,
+so CI noise cannot flake this job. Two invariants are enforced:
+
+  1. No regression: per case, the fused variant's modeled bytes must not
+     exceed the committed baseline (tiny tolerance for float rounding).
+  2. The headline win holds: at >=50% block sparsity the fused variant
+     models >=30% fewer HBM bytes than the two-kernel path.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+TOL = 1.001  # modeled bytes are deterministic; allow only float jitter
+MIN_SAVED_AT_50 = 0.30
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as fh:
+        cur = json.load(fh)
+    with open(argv[1]) as fh:
+        base = json.load(fh)
+
+    base_cases = {c["case"]: c for c in base["cases"]}
+    failures = []
+    matched = 0
+    for c in cur["cases"]:
+        b = base_cases.get(c["case"])
+        if b is None:
+            continue  # new case: no baseline yet, tracked from next commit
+        matched += 1
+        got = c["modeled_hbm_bytes"]["fused"]
+        want = b["modeled_hbm_bytes"]["fused"]
+        if got > want * TOL:
+            failures.append(
+                f"{c['case']}: fused modeled HBM bytes regressed "
+                f"{want} -> {got}"
+            )
+        if c["tile_dots"]["skipped"] < b["tile_dots"]["skipped"]:
+            failures.append(
+                f"{c['case']}: tile-dots skipped regressed "
+                f"{b['tile_dots']['skipped']} -> {c['tile_dots']['skipped']}"
+            )
+        if c["sparsity_measured"] >= 0.5:
+            saved = 1.0 - got / c["modeled_hbm_bytes"]["two_kernel"]
+            if saved < MIN_SAVED_AT_50:
+                failures.append(
+                    f"{c['case']}: fused saves only {saved:.1%} HBM bytes "
+                    f"vs two-kernel (need >={MIN_SAVED_AT_50:.0%})"
+                )
+
+    if matched == 0:
+        # A rename/shape change must not silently disable the gate.
+        print(
+            "REGRESSION GATE BROKEN: no current case matches the baseline "
+            "-- update benchmarks/baselines/ together with the benchmark",
+            file=sys.stderr,
+        )
+        return 1
+    if failures:
+        for f in failures:
+            print(f"REGRESSION: {f}", file=sys.stderr)
+        return 1
+    print(f"bench regression check OK ({matched} cases matched)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Fused SparCE MLP megakernel vs two-kernel vs dense, across sparsity.
+
+For each activation block-sparsity level (0 / 50 / 90% of row-tiles), runs
+all three variants in interpret mode and reports wall time, tile-dots
+skipped, and modeled HBM bytes (core.cost_model.mlp_hbm_bytes at the
+MEASURED sparsity). The modeled-bytes fields are deterministic, which is
+what the CI regression gate (check_bench_regression.py) pins against the
+committed baseline.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import cost_model, sasa, sparse_ops, sprf
+from repro.kernels import ops as kops
+
+M, K, F, N = 128, 256, 512, 256
+BM, BF, BN = 16, 128, 128  # 8 row-tiles: 0/50/90% are all realizable
+
+
+def _case(sparsity: float) -> dict:
+    kx, k1, k2 = jax.random.split(jax.random.PRNGKey(int(sparsity * 100)), 3)
+    # Row-tile-clustered zeros + nonnegative x and w_in: a row-tile of the
+    # activated intermediate is zero exactly when the x row-tile is, so
+    # the requested sparsity is realized at (BM, BF) block granularity.
+    x = jnp.abs(sprf.random_sparse(kx, (M, K), sparsity, cluster=(BM, K)))
+    w_in = jnp.abs(jax.random.normal(k1, (K, F), jnp.float32)) * 0.05
+    w_out = jax.random.normal(k2, (F, N), jnp.float32) * 0.05
+
+    def run_fused():
+        y, bmp = kops.sparce_mlp_fused(
+            x, w_in, w_out, block_m=BM, block_f=BF, interpret=True)
+        return jax.block_until_ready(y), bmp
+
+    plan = sasa.MlpPlan(
+        variant="two_kernel", block_m=BM, block_f=BF, block_n=BN)
+
+    def run_two_kernel():
+        # Same single implementation the fused-mode fallback serves.
+        y, bits = sparse_ops.two_kernel_mlp(
+            x, w_in, w_out, plan, interpret=True)
+        return jax.block_until_ready(y), bits
+
+    def run_dense():
+        return jax.block_until_ready(
+            jnp.dot(jnp.maximum(jnp.dot(x, w_in), 0.0), w_out))
+
+    (y_f, bmp), us_fused = timed(run_fused, warmup=1, iters=2)
+    (y_t, _), us_two = timed(run_two_kernel, warmup=1, iters=2)
+    y_d, us_dense = timed(run_dense, warmup=1, iters=2)
+    err = float(jnp.max(jnp.abs(y_f - y_d)))
+
+    bits = np.asarray(bmp.bits)
+    grid_n = -(-N // BN)
+    skipped = int(bits.sum()) * grid_n
+    total = bits.size * grid_n
+    measured = float(bits.mean())
+    by = cost_model.mlp_hbm_bytes(
+        M, K, F, N, block_sparsity=measured, dtype_bytes=4, block_m=BM)
+    name = f"s{int(round(sparsity * 100)):02d}"
+    emit(
+        f"fused_mlp/{name}", us_fused,
+        f"two_kernel_us={us_two:.1f};dense_us={us_dense:.1f};"
+        f"tile_dots_skipped={skipped}/{total};"
+        f"hbm_fused={by['fused']};hbm_two_kernel={by['two_kernel']};"
+        f"saved={by['fused_saved_frac_vs_two_kernel']:.3f};max_err={err:.1e}",
+    )
+    return {
+        "case": name,
+        "shape": {"m": M, "k": K, "f": F, "n": N,
+                  "block_m": BM, "block_f": BF, "block_n": BN},
+        "sparsity_requested": sparsity,
+        "sparsity_measured": measured,
+        "tile_dots": {"skipped": skipped, "total": total},
+        "wall_us": {"fused": us_fused, "two_kernel": us_two,
+                    "dense": us_dense},
+        "modeled_hbm_bytes": {
+            "fused": by["fused"], "two_kernel": by["two_kernel"],
+            "dense": by["dense"],
+        },
+        "max_err_vs_dense": err,
+    }
+
+
+def run(json_path: Optional[str] = None) -> dict:
+    cases = [_case(s) for s in (0.0, 0.5, 0.9)]
+    doc = {"benchmark": "fused_mlp", "schema": 1, "cases": cases}
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return doc

@@ -1,11 +1,19 @@
 """Benchmark harness entrypoint: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Usage:
-    PYTHONPATH=src python -m benchmarks.run [--only fig17] [--skip-roofline]
+Prints ``name,us_per_call,derived`` CSV, and writes machine-readable
+``BENCH_mlp.json`` / ``BENCH_serve.json`` artifacts (under --json-dir) so
+the perf trajectory is tracked across PRs; CI's bench-smoke job pins the
+deterministic modeled-HBM-bytes fields against a committed baseline.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig17] \
+        [--skip-roofline] [--json-dir .]
 """
 from __future__ import annotations
 
 import argparse
+import functools
+import os
 import sys
 import traceback
 
@@ -15,14 +23,18 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--roofline-dir", default="results/dryrun_final")
+    ap.add_argument("--json-dir", default=".",
+                    help="where BENCH_*.json artifacts are written")
     args = ap.parse_args()
 
     from benchmarks import (
         fig4_redundant_ops, fig14_app_time, fig16_layerwise,
-        fig17_sparsity_scaling, fig18_operand_order, moe_structural,
-        roofline_report, serve_cache_skip,
+        fig17_sparsity_scaling, fig18_operand_order, fused_mlp,
+        moe_structural, roofline_report, serve_cache_skip,
     )
 
+    os.makedirs(args.json_dir, exist_ok=True)
+    jp = functools.partial(os.path.join, args.json_dir)
     suites = [
         ("fig4", fig4_redundant_ops.run),
         ("fig14", fig14_app_time.run),
@@ -30,11 +42,13 @@ def main() -> None:
         ("fig17", fig17_sparsity_scaling.run),
         ("fig18", fig18_operand_order.run),
         ("moe", moe_structural.run),
-        ("serve_skip", serve_cache_skip.run),
+        ("fused_mlp",
+         functools.partial(fused_mlp.run, json_path=jp("BENCH_mlp.json"))),
+        ("serve_skip",
+         functools.partial(serve_cache_skip.run,
+                           json_path=jp("BENCH_serve.json"))),
     ]
     if not args.skip_roofline:
-        import functools
-        import os
         rdir = args.roofline_dir
         if not os.path.isdir(rdir):
             rdir = "results/dryrun"

@@ -8,6 +8,9 @@ modeled v5e decode-attention speedups.
 """
 from __future__ import annotations
 
+import json
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -19,7 +22,7 @@ from repro.kernels.sparce_decode_attn import (
 )
 
 
-def _run_engine() -> None:
+def _run_engine() -> dict:
     """End-to-end: mixed-length workload through the continuous batcher.
 
     Reports the engine-level analogue of the kernel numbers below: decode
@@ -62,10 +65,21 @@ def _run_engine() -> None:
          f"decode_tokens={m['decode_tokens']};dense_schedule={dense_tokens};"
          f"saved={1 - m['decode_tokens'] / dense_tokens:.3f};"
          f"ticks={m['ticks']};mlp_skip={m['mlp_skip_fraction']:.3f}")
+    return {
+        "case": "engine/mixed10x4",
+        "wall_us": dt * 1e6,
+        "decode_tokens": int(m["decode_tokens"]),
+        "dense_schedule_tokens": int(dense_tokens),
+        "ticks": int(m["ticks"]),
+        "tile_dots": {"skipped": m["skipped_tile_dots"],
+                      "total": m["total_tile_dots"]},
+        "mlp_skip_fraction": m["mlp_skip_fraction"],
+        "modeled_hbm_bytes_saved": m["modeled_hbm_bytes_saved"],
+    }
 
 
-def run() -> None:
-    _run_engine()
+def run(json_path: Optional[str] = None) -> dict:
+    cases = [_run_engine()]
     key = jax.random.PRNGKey(0)
     B, L, KV, g, D, bl = 8, 2048, 2, 4, 128, 256
     q = jax.random.normal(key, (B, KV, g, D), jnp.float32)
@@ -88,3 +102,16 @@ def run() -> None:
         emit(f"serve_skip/occupancy{int(occupancy*100)}", us,
              f"tiles_skipped={skip:.3f};modeled_speedup={1/(1-skip+1e-9):.2f};"
              f"max_err={err:.1e}")
+        cases.append({
+            "case": f"decode_attn/occupancy{int(occupancy * 100)}",
+            "wall_us": us,
+            "tiles_skipped_frac": float(skip),
+            "modeled_speedup": float(1 / (1 - skip + 1e-9)),
+            "max_err": err,
+        })
+    doc = {"benchmark": "serve_cache_skip", "schema": 1, "cases": cases}
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return doc

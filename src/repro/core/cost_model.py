@@ -178,6 +178,49 @@ def tpu_gemm_time(
     )
 
 
+def mlp_hbm_bytes(
+    m: int, k: int, f: int, n: int, *, block_sparsity: float,
+    dtype_bytes: int = 4, block_m: int = 64,
+) -> dict:
+    """Modeled HBM traffic of one 2-matrix MLP y = act(x @ w_in) @ w_out.
+
+    Per variant (all figures bytes, per forward call):
+
+      * ``dense``      -- unfused XLA: x + w_in in, intermediate out+in
+        (one HBM round trip even when XLA fuses the activation into the
+        producer), w_out in, y out. No sparsity awareness.
+      * ``two_kernel`` -- the pre-fused SparCE path: up-GEMM writes h,
+        ``relu_bitmap`` reads h and writes a (+bits), the gated down-GEMM
+        reads a and every w_out stripe (compute skip only). THREE
+        round trips of the (m, f) intermediate.
+      * ``fused``      -- the megakernel: the intermediate never touches
+        HBM, and a zero tile's w_out stripe DMA is never issued, so the
+        w_out term scales with (1 - block_sparsity) per row-tile sweep.
+
+    ``block_sparsity`` is the (measured or expected) fraction of
+    all-zero (block_m, block_f) tiles of the activated intermediate.
+    Row-tile sweeps re-fetch w_out in every variant (worst case, no
+    cross-row-tile reuse), so nm multiplies the w_out streams.
+    """
+    s = min(max(float(block_sparsity), 0.0), 1.0)
+    nm = -(-m // block_m)
+    x_b = m * k * dtype_bytes
+    win_b = k * f * dtype_bytes
+    wout_b = nm * f * n * dtype_bytes
+    inter_b = m * f * dtype_bytes
+    y_b = m * n * dtype_bytes
+    dense = x_b + win_b + 2 * inter_b + wout_b + y_b
+    two_kernel = x_b + win_b + 4 * inter_b + wout_b + y_b
+    fused = x_b + win_b + wout_b * (1.0 - s) + y_b
+    return {
+        "dense": int(dense),
+        "two_kernel": int(two_kernel),
+        "fused": int(round(fused)),
+        "fused_saved_frac_vs_two_kernel": 1.0 - fused / two_kernel,
+        "intermediate_bytes": int(inter_b),
+    }
+
+
 def model_flops(n_params_active: int, tokens: int) -> float:
     """MODEL_FLOPS = 6 * N_active * D (training); 2*N*D for inference."""
     return 6.0 * n_params_active * tokens

@@ -283,6 +283,255 @@ def plan_cache_clear() -> None:
     _PLAN_CACHE_STATS["hits"] = _PLAN_CACHE_STATS["misses"] = 0
 
 
+# ------------------------------------------------------------- planner v2
+# MLP-level planning: instead of planning the two GEMMs of an MLP
+# independently, plan the pair as one unit and decide whether the fused
+# megakernel (kernels/sparce_mlp.py) or the two-kernel path should serve
+# it. The decision input is MEASURED per-layer block sparsity (EMA of the
+# realized aux skip fractions), not an i.i.d. prior -- the serving engine
+# feeds the tracker and replans when the bucketed estimate moves.
+
+@dataclasses.dataclass(frozen=True)
+class MlpPlan:
+    """Skip schedule for one MLP y = act(x[M,K] @ w_in[K,F]) @ w_out[F,N]."""
+
+    variant: str  # 'fused' | 'two_kernel' | 'dense'
+    block_m: int
+    block_f: int  # bitmap granularity over the intermediate's F dim
+    block_n: int  # down-projection n-tile (two-kernel path only)
+    expected_block_sparsity: float = 0.0
+    # Explainability: modeled HBM bytes per variant at the measured
+    # sparsity, so `why this plan` is answerable from the plan itself.
+    modeled_bytes: Tuple[Tuple[str, int], ...] = ()
+
+    def modeled(self) -> dict:
+        return dict(self.modeled_bytes)
+
+
+def _fused_vmem_bytes(bm: int, bf: int, k: int, n: int, itemsize: int) -> int:
+    """Working set of the fused kernel: x tile + w_in tile (x2 pipeline
+    buffers), 2 a-tiles (f32), 2 w_out stripes, f32 accumulator, y tile."""
+    return (
+        2 * bm * k * itemsize
+        + 2 * k * bf * itemsize
+        + 2 * bm * bf * 4
+        + 2 * bf * n * itemsize
+        + bm * n * 4
+        + bm * n * itemsize
+    )
+
+
+def plan_mlp(
+    m: int,
+    k: int,
+    f: int,
+    n: int,
+    *,
+    measured_block_sparsity: float = 0.0,
+    dtype: str = "float32",
+    block_m: Optional[int] = None,
+    block_f: Optional[int] = None,
+    block_n: Optional[int] = None,
+    min_expected_block_sparsity: float = 0.02,
+) -> MlpPlan:
+    """Choose tiling + variant for one MLP from measured block sparsity.
+
+    Search: block shapes from the MXU-aligned menu, constrained by the
+    fused kernel's VMEM working set; variant = argmin of modeled HBM
+    bytes (core.cost_model.mlp_hbm_bytes). The fused kernel needs K and N
+    resident per row-tile, so very wide d_model falls back to the
+    two-kernel path -- the plan records why via ``modeled_bytes``.
+    """
+    from repro.core import cost_model
+
+    sub = _SUBLANE.get(dtype, 8)
+    itemsize = 2 if dtype == "bfloat16" else 4
+    s = min(max(float(measured_block_sparsity), 0.0), 1.0)
+
+    bm_menu = [block_m] if block_m else [
+        b for b in (sub, 2 * sub, 4 * sub, 8 * sub, 256) if b <= max(m, sub)
+    ]
+    bf_menu = [block_f] if block_f else [
+        b for b in (128, 256, 512) if b <= max(f, 128)
+    ]
+    bn = block_n or _round_block(n, 256, _MXU_LANE)
+
+    best = None  # (bytes, -tile_area, bm, bf) -> prefer bigger tiles on tie
+    for bm in bm_menu:
+        for bf in bf_menu:
+            if _fused_vmem_bytes(bm, bf, k, n, itemsize) > _VMEM_BUDGET_BYTES:
+                continue
+            by = cost_model.mlp_hbm_bytes(
+                m, k, f, n, block_sparsity=s, dtype_bytes=itemsize,
+                block_m=bm,
+            )["fused"]
+            cand = (by, -(bm * bf), bm, bf)
+            if best is None or cand < best:
+                best = cand
+    fused_ok = best is not None
+    if fused_ok:
+        _, _, bm, bf = best
+    else:
+        bm = block_m or _round_block(m, 64, sub)
+        bf = block_f or 128
+
+    by = cost_model.mlp_hbm_bytes(
+        m, k, f, n, block_sparsity=s, dtype_bytes=itemsize, block_m=bm
+    )
+    if s < min_expected_block_sparsity:
+        # No sparsity to exploit: the fused kernel still wins on HBM
+        # round trips, but only when its working set fits.
+        variant = "fused" if fused_ok else "dense"
+    elif fused_ok and by["fused"] <= by["two_kernel"]:
+        variant = "fused"
+    else:
+        variant = "two_kernel"
+    return MlpPlan(
+        variant=variant,
+        block_m=bm,
+        block_f=bf,
+        block_n=bn,
+        expected_block_sparsity=s,
+        modeled_bytes=tuple(
+            (kk, vv) for kk, vv in by.items() if isinstance(vv, int)
+        ),
+    )
+
+
+def plan_mlp_cached(
+    m: int,
+    k: int,
+    f: int,
+    n: int,
+    *,
+    measured_block_sparsity: float = 0.0,
+    dtype: str = "float32",
+    block_m: Optional[int] = None,
+    block_f: Optional[int] = None,
+    block_n: Optional[int] = None,
+    min_expected_block_sparsity: float = 0.02,
+) -> MlpPlan:
+    """Memoised :func:`plan_mlp`; sparsity bucketed as in plan_matmul_cached."""
+    s = _bucket_sparsity(measured_block_sparsity)
+    key = ("mlp", m, k, f, n, dtype, s, block_m, block_f, block_n,
+           min_expected_block_sparsity)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        _PLAN_CACHE_STATS["misses"] += 1
+        plan = plan_mlp(
+            m, k, f, n, measured_block_sparsity=s, dtype=dtype,
+            block_m=block_m, block_f=block_f, block_n=block_n,
+            min_expected_block_sparsity=min_expected_block_sparsity,
+        )
+        _PLAN_CACHE[key] = plan
+    else:
+        _PLAN_CACHE_STATS["hits"] += 1
+    return plan
+
+
+def autotune_mlp_plan(
+    m: int, k: int, f: int, n: int, *,
+    measured_block_sparsity: float, dtype: str = "float32",
+    sample_inputs=None, iters: int = 2, interpret: bool = True,
+) -> Tuple[MlpPlan, dict]:
+    """Measuring autotuner: time the fused vs two-kernel candidates.
+
+    The model-scored :func:`plan_mlp_cached` is the hot-path default (no
+    arrays needed, pure trace-time); this entry point additionally RUNS
+    both variants on ``sample_inputs`` (or synthetic ones at the measured
+    sparsity) and returns the wall-clock winner plus the measurements, so
+    deployments can validate the byte model against real timings. Results
+    are cached process-wide like every other plan.
+    """
+    import timeit
+
+    import jax
+    import jax.numpy as jnp
+
+    key = ("mlp-tuned", m, k, f, n, dtype, _bucket_sparsity(
+        measured_block_sparsity), interpret)
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None:
+        _PLAN_CACHE_STATS["hits"] += 1
+        return hit
+
+    from repro.core import sparse_ops, sprf
+    from repro.kernels import ops as kops
+
+    plan = plan_mlp(
+        m, k, f, n, measured_block_sparsity=measured_block_sparsity,
+        dtype=dtype,
+    )
+    if sample_inputs is None:
+        dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+        kx, k1, k2 = jax.random.split(jax.random.PRNGKey(0), 3)
+        # Row-clustered zeros so the activated intermediate realizes the
+        # measured block sparsity regardless of w_in.
+        x = jnp.abs(sprf.random_sparse(
+            kx, (m, k), measured_block_sparsity, dtype=dt,
+            cluster=(plan.block_m, k)))
+        w_in = jnp.abs(jax.random.normal(k1, (k, f), jnp.float32)).astype(dt)
+        w_out = jax.random.normal(k2, (f, n), jnp.float32).astype(dt) * 0.05
+    else:
+        x, w_in, w_out = sample_inputs
+
+    def run_fused():
+        y, _ = kops.sparce_mlp_fused(
+            x, w_in, w_out, block_m=plan.block_m, block_f=plan.block_f,
+            interpret=interpret)
+        return jax.block_until_ready(y)
+
+    def run_two_kernel():
+        # Same pipeline the fused-mode fallback serves (single impl).
+        y, _ = sparse_ops.two_kernel_mlp(
+            x, w_in, w_out, plan, interpret=interpret)
+        return jax.block_until_ready(y)
+
+    timings = {}
+    for name, fn in (("fused", run_fused), ("two_kernel", run_two_kernel)):
+        fn()  # compile / warm
+        timings[name] = timeit.timeit(fn, number=iters) / iters
+    winner = min(timings, key=timings.get)
+    tuned = dataclasses.replace(plan, variant=winner)
+    result = (tuned, timings)
+    _PLAN_CACHE_STATS["misses"] += 1
+    _PLAN_CACHE[key] = result
+    return result
+
+
+class SparsityEMA:
+    """EMA tracker of measured per-layer block sparsity.
+
+    The aux pytree's ``skip`` leaf ([skipped, total] tile-dots) is the
+    measurement; the serving engine calls :meth:`update` with it after
+    every decode tick and reads :meth:`bucketed` when (re)planning. The
+    bucket is coarse (1/8) so a drifting estimate does not thrash the
+    trace cache: a replan (and hence a retrace) happens only when the
+    measured sparsity crosses a bucket edge.
+    """
+
+    BUCKETS = 8
+
+    def __init__(self, alpha: float = 0.2):
+        self.alpha = float(alpha)
+        self.value: Optional[float] = None
+        self.updates = 0
+
+    def update(self, skipped: float, total: float) -> float:
+        if total > 0:
+            frac = min(max(skipped / total, 0.0), 1.0)
+            self.value = (
+                frac if self.value is None
+                else self.alpha * frac + (1 - self.alpha) * self.value
+            )
+            self.updates += 1
+        return self.value or 0.0
+
+    def bucketed(self) -> float:
+        v = self.value or 0.0
+        return round(v * self.BUCKETS) / self.BUCKETS
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerSpec:
     """One GEMM-shaped layer for network-level analysis."""

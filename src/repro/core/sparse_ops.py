@@ -35,7 +35,7 @@ class SparsityConfig:
     """First-class framework config for the paper's technique."""
 
     enabled: bool = False
-    mode: str = "reference"  # 'kernel' | 'reference' | 'off'
+    mode: str = "reference"  # 'fused' | 'kernel' | 'reference' | 'off'
     block_m: int = 64
     block_k: int = 128
     block_n: int = 128
@@ -45,6 +45,12 @@ class SparsityConfig:
     weight_sparsity: float = 0.0  # pruning level applied at init when >0
     relufication: bool = False  # swap smooth MLP act for relu^2
     interpret: bool = True  # Pallas interpret mode (CPU container)
+    # Planner-v2 inputs (mode='fused'): the measured block-sparsity
+    # estimate the MLP plan is built from (bucketed; a changed value
+    # means a retrace, so the serving engine only updates it when the
+    # EMA crosses a bucket edge), and whether the engine may do so.
+    expected_sparsity: float = 0.0
+    autotune: bool = False
 
     def block(self) -> Tuple[int, int]:
         return (self.block_m, self.block_k)
@@ -158,6 +164,123 @@ def sparce_matmul(
     lbits = lhs_bitmap.bits if lhs_bitmap is not None else None
     rbits = rhs_bitmap.bits if rhs_bitmap is not None else None
     return _sparce_matmul(x, w, lbits, rbits, plan, cfg.mode, cfg.interpret)
+
+
+# ------------------------------------------------------------- fused MLP
+# The megakernel path (SparsityConfig.mode='fused'): one Pallas kernel
+# computes act(x @ w_in) @ w_out with the bitmap emitted at the
+# activation's writeback, the intermediate VMEM-resident, and zero
+# tiles' w_out stripe fetches never issued. Backward runs the reference
+# semantics (recompute-from-x), so the op stays trainable.
+
+def _fused_mlp_run(x, w_in, w_out, plan, act, interpret):
+    from repro.kernels import ops as kops
+
+    y, bmp = kops.sparce_mlp_fused(
+        x, w_in, w_out, block_m=plan.block_m, block_f=plan.block_f,
+        act=act, interpret=interpret,
+    )
+    return y, bmp.bits
+
+
+def two_kernel_mlp(x, w_in, w_out, plan, act="relu", interpret=True):
+    """The pre-fused pipeline the planner falls back to: dense up-proj,
+    producer-fused relu+bitmap kernel, bitmap-gated down-proj kernel.
+    Three HBM round trips of the intermediate -- what the fused variant
+    eliminates -- but no VMEM residency requirement on K and N. The
+    single implementation is shared by the fused-mode fallback, the
+    measuring autotuner, and the benchmarks so all three time/serve the
+    same pipeline. Returns (y, bits)."""
+    from repro.kernels import ops as kops
+
+    h = jnp.dot(x, w_in)
+    a, bmp = kops.relu_with_bitmap(
+        h, (plan.block_m, plan.block_f), interpret=interpret
+    )
+    if act == "relu2":
+        a = a * a  # same zero pattern: the bitmap stays valid
+    gplan = sasa.bitmap_gated_plan(
+        x.shape[0], w_in.shape[1], w_out.shape[1],
+        block_m=plan.block_m, block_k=plan.block_f, block_n=plan.block_n,
+    )
+    y = kops.sparce_gemm(
+        a, w_out, gplan, lhs_bitmap=bmp, out_dtype=x.dtype,
+        interpret=interpret,
+    )
+    return y, bmp.bits
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _sparce_mlp(x, w_in, w_out, plan, act, interpret):
+    if plan.variant == "fused":
+        return _fused_mlp_run(x, w_in, w_out, plan, act, interpret)
+    if plan.variant == "two_kernel":
+        return two_kernel_mlp(x, w_in, w_out, plan, act, interpret)
+    h = jnp.dot(x, w_in)
+    a = jnp.maximum(h, 0.0)
+    if act == "relu2":
+        a = a * a
+    bits = sprf.compute_bitmap(a, (plan.block_m, plan.block_f)).bits
+    return jnp.dot(a, w_out), bits
+
+
+def _mlp_fwd_vjp(x, w_in, w_out, plan, act, interpret):
+    out = _sparce_mlp(x, w_in, w_out, plan, act, interpret)
+    return out, (x, w_in, w_out)
+
+
+def _mlp_bwd_vjp(plan, act, interpret, res, cts):
+    g, _ = cts  # no cotangent flows into the int32 bitmap
+    x, w_in, w_out = res
+    h = jnp.dot(
+        x.astype(jnp.float32), w_in.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    r = jnp.maximum(h, 0.0)
+    a = r * r if act == "relu2" else r
+    gf = g.astype(jnp.float32)
+    da = jnp.dot(gf, w_out.astype(jnp.float32).T)
+    dw_out = jnp.dot(a.T, gf).astype(w_out.dtype)
+    # d(act)/dh: relu -> 1[h>0]; relu2 -> 2*relu(h) (already 0 for h<=0).
+    dh = da * ((2.0 * r) if act == "relu2" else (h > 0).astype(jnp.float32))
+    dx = jnp.dot(dh, w_in.astype(jnp.float32).T).astype(x.dtype)
+    dw_in = jnp.dot(x.astype(jnp.float32).T, dh).astype(w_in.dtype)
+    return dx, dw_in, dw_out
+
+
+_sparce_mlp.defvjp(_mlp_fwd_vjp, _mlp_bwd_vjp)
+
+
+def sparce_mlp(
+    x: jax.Array,
+    w_in: jax.Array,
+    w_out: jax.Array,
+    act: str,
+    cfg: SparsityConfig,
+) -> Tuple[jax.Array, jax.Array, "sasa.MlpPlan"]:
+    """Fused MLP forward under the planner-v2 MlpPlan.
+
+    Returns (y, bits, plan) -- the plan rides along so callers can
+    report honest skip accounting: the 'dense' fallback variant computes
+    every tile, so its bits must not be counted as realized skips.
+
+    x: (M, K); the plan is pulled from the process-level SASA cache keyed
+    on shapes + the bucketed measured sparsity (cfg.expected_sparsity).
+    cfg.block_* pin the tile geometry so skip accounting stays exactly
+    comparable with the reference path; the planner still chooses the
+    VARIANT (fused vs two-kernel fallback) from modeled HBM bytes.
+    """
+    m, k = x.shape
+    _, f = w_in.shape
+    _, n = w_out.shape
+    plan = sasa.plan_mlp_cached(
+        m, k, f, n,
+        measured_block_sparsity=cfg.expected_sparsity,
+        dtype=str(x.dtype),
+        block_m=cfg.block_m, block_f=cfg.block_k, block_n=cfg.block_n,
+    )
+    y, bits = _sparce_mlp(x, w_in, w_out, plan, act, cfg.interpret)
+    return y, bits, plan
 
 
 def gemm_skip_stats(

@@ -15,6 +15,7 @@ from repro.core.sasa import SkipPlan
 from repro.core.sprf import TileBitmap
 from repro.kernels import sparce_gemm as _sg
 from repro.kernels import relu_bitmap as _rb
+from repro.kernels import sparce_mlp as _sm
 
 
 def _ceil_to(v: int, q: int) -> int:
@@ -108,6 +109,42 @@ def sparce_gemm(
     else:
         raise ValueError(gate)
     return y[:m, :n]
+
+
+def sparce_mlp_fused(
+    x: jax.Array,
+    w_in: jax.Array,
+    w_out: jax.Array,
+    *,
+    block_m: int,
+    block_f: int,
+    act: str = "relu",
+    out_dtype=None,
+    interpret: bool = True,
+) -> tuple[jax.Array, TileBitmap]:
+    """Padded wrapper over the fused MLP megakernel.
+
+    Returns (y[M, N], bitmap) where the bitmap covers the activated
+    intermediate act(x @ w_in) at (block_m, block_f) granularity -- the
+    same TileBitmap the two-kernel path would produce, so skip
+    accounting is identical. Padding rows/stripes are all-zero after the
+    activation, so their bits are 1 and their w_out stripes never fetch.
+    """
+    m, k = x.shape
+    k2, fdim = w_in.shape
+    f2, n = w_out.shape
+    assert k == k2 and fdim == f2, (x.shape, w_in.shape, w_out.shape)
+    pm, pf = _ceil_to(m, block_m), _ceil_to(fdim, block_f)
+    xp = _pad2(x, pm, k)
+    winp = _pad2(w_in, k, pf)
+    woutp = _pad2(w_out, pf, n)
+    y, bits = _sm.sparce_mlp_fused(
+        xp, winp, woutp, block_m=block_m, block_f=block_f, act=act,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return y[:m, :n], TileBitmap(
+        bits=bits, block=(block_m, block_f), shape=(m, fdim)
+    )
 
 
 def relu_with_bitmap(

@@ -90,6 +90,13 @@ def _compacted_kernel(nnz_ref, idx_ref, x_ref, w_ref, o_ref, acc_ref, *, nk: int
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # nnz == 0 guard: when a row-tile has NO nonzero k-tiles, the clamped
+    # idx still points at tile 0 and the pipeline prologue DMAs it before
+    # the body runs, so this predicate is ALSO what keeps that tile's
+    # (possibly garbage) contents out of the accumulator on the first
+    # step: t >= 0 always, so t < nnz == 0 is false on every step
+    # including step 0. Pinned by the NaN-poison regression tests in
+    # tests/test_sparce_mlp.py (test_compacted_*).
     @pl.when(t < nnz_ref[i])
     def _compute():
         acc_ref[...] += jnp.dot(

@@ -31,8 +31,16 @@ def main(argv=None):
                     help="mixed-length workload: prompt lengths and "
                          "max_new budgets drawn per request")
     ap.add_argument("--sparce", action="store_true",
-                    help="enable the SparCE reference path in serving "
-                         "MLPs (skip-fraction metrics)")
+                    help="enable the SparCE path in serving MLPs "
+                         "(skip-fraction metrics)")
+    ap.add_argument("--sparce-mode", default="reference",
+                    choices=("reference", "kernel", "fused"),
+                    help="SparCE implementation for --sparce: 'fused' = "
+                         "the MLP megakernel (bitmap at writeback, "
+                         "VMEM-resident intermediate, w_out fetch skip)")
+    ap.add_argument("--sparce-autotune", action="store_true",
+                    help="let the engine replan MLP tiling/variant from "
+                         "the measured (EMA) block sparsity")
     ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args(argv)
 
@@ -55,7 +63,8 @@ def main(argv=None):
         # block_m=1: decode rows are slots, so per-row tiles make each
         # freed slot's GEMM work individually skippable.
         sparsity = SparsityConfig(
-            enabled=True, mode="reference", block_m=1, block_k=128,
+            enabled=True, mode=args.sparce_mode, block_m=1, block_k=128,
+            autotune=args.sparce_autotune,
         )
     params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed))
     srv = Server(cfg, params, ServeConfig(

@@ -88,6 +88,27 @@ def mlp_fwd(
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     no_stats = jnp.zeros((2,), jnp.float32)
+    if (
+        scfg.enabled and scfg.mode == "fused" and scfg.gate_activations
+        and act in ("relu", "relu2")
+    ):
+        # Megakernel path: up-proj, activation, bitmap-at-writeback and
+        # bitmap-gated down-proj in ONE kernel; the intermediate never
+        # touches HBM. The bitmap geometry matches the reference path's
+        # (block_m, block_k), so the skip accounting is identical.
+        n = params["w_out"].shape[-1]
+        y, bits, plan = sparse_ops.sparce_mlp(
+            x2, params["w_in"], params["w_out"], act, scfg
+        )
+        if plan.variant == "dense":
+            # Fallback computes every tile: no realized skips to report.
+            return y.reshape(shape), no_stats
+        bmp = sprf.TileBitmap(
+            bits=bits, block=(scfg.block_m, scfg.block_k),
+            shape=(x2.shape[0], params["w_in"].shape[-1]),
+        )
+        stats = sparse_ops.gemm_skip_stats(bmp, n, scfg.block_n)
+        return y.reshape(shape), stats
     h = jnp.dot(x2, params["w_in"])
     if act in ("silu", "gelu"):
         a, _ = _activate(h, act, scfg)

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import cost_model, sasa
 from repro.core.sparse_ops import SparsityConfig
 from repro.models import model as model_lib
 
@@ -82,11 +83,44 @@ class Server:
         if serve_cfg.sparsity is not None:
             cfg = dataclasses.replace(cfg, sparsity=serve_cfg.sparsity)
         self.cfg, self.params, self.sc = cfg, params, serve_cfg
+        # Step fns memoised per sparsity bucket: re-entering a bucket the
+        # engine has already planned for reuses its jitted fns (and their
+        # trace caches) instead of recompiling -- an EMA hovering at a
+        # bucket edge costs one retrace per DISTINCT bucket, not per flip.
+        self._step_fn_cache: Dict[float, tuple] = {}
+        self._build_step_fns()
+        # Planner-v2 feedback loop: EMA of the realized block sparsity
+        # (from the aux skip accounting). When the bucketed estimate
+        # crosses a bucket edge, the MLP plans are rebuilt from the new
+        # measurement and the step functions re-jitted (one retrace per
+        # bucket move; plans themselves come from the process cache).
+        self._ema = sasa.SparsityEMA()
+        self._rng = np.random.default_rng(serve_cfg.seed)
+        self.metrics: Dict[str, float] = {
+            "prefill_tokens": 0, "decode_tokens": 0, "ticks": 0,
+            "admitted": 0, "completed": 0,
+            "skipped_tile_dots": 0.0, "total_tile_dots": 0.0,
+            "mlp_skip_fraction": 0.0,
+            "prefill_s": 0.0, "decode_s": 0.0,
+            "replans": 0, "modeled_hbm_bytes_saved": 0.0,
+        }
+
+    def _build_step_fns(self) -> None:
+        cfg, serve_cfg = self.cfg, self.sc
+        key = (
+            cfg.sparsity.expected_sparsity
+            if cfg.sparsity is not None else 0.0
+        )
+        hit = self._step_fn_cache.get(key)
+        if hit is not None:
+            self._decode, self._prefill = hit
+            return
         self._decode = jax.jit(
             lambda p, toks, caches, active: model_lib.serving_decode_step(
                 p, cfg, toks, caches, active
             )
         )
+
         def _prefill_fn(p, batch):
             caches = model_lib.init_caches(cfg, 1, serve_cfg.max_len)
             logits, new_caches, aux = model_lib.forward(
@@ -97,14 +131,27 @@ class Server:
             return logits, new_caches, aux["skip"]
 
         self._prefill = jax.jit(_prefill_fn)
-        self._rng = np.random.default_rng(serve_cfg.seed)
-        self.metrics: Dict[str, float] = {
-            "prefill_tokens": 0, "decode_tokens": 0, "ticks": 0,
-            "admitted": 0, "completed": 0,
-            "skipped_tile_dots": 0.0, "total_tile_dots": 0.0,
-            "mlp_skip_fraction": 0.0,
-            "prefill_s": 0.0, "decode_s": 0.0,
-        }
+        self._step_fn_cache[key] = (self._decode, self._prefill)
+
+    def _maybe_replan(self) -> None:
+        """Re-bucket the measured sparsity into the MLP planner input.
+
+        Only acts when ``SparsityConfig.autotune`` is set; needs a couple
+        of EMA updates before trusting the measurement. A replan swaps
+        ``expected_sparsity`` (a static plan input) and rebuilds the
+        jitted step functions -- the SASA plan cache keeps everything
+        else memoised, so the cost is exactly one retrace."""
+        sp = self.cfg.sparsity
+        if sp is None or not (sp.enabled and sp.autotune):
+            return
+        bucket = self._ema.bucketed()
+        if self._ema.updates >= 2 and bucket != sp.expected_sparsity:
+            self.cfg = dataclasses.replace(
+                self.cfg,
+                sparsity=dataclasses.replace(sp, expected_sparsity=bucket),
+            )
+            self._build_step_fns()
+            self.metrics["replans"] += 1
 
     # ------------------------------------------------------------ sampling
     def _sample(self, logits: np.ndarray) -> np.ndarray:
@@ -246,6 +293,8 @@ class Server:
             skip = np.asarray(skip, np.float64)
             self.metrics["skipped_tile_dots"] += float(skip[0])
             self.metrics["total_tile_dots"] += float(skip[1])
+            self._ema.update(float(skip[0]), float(skip[1]))
+            self._maybe_replan()
 
             last = np.asarray(
                 logits[:, -1] if cfg.frontend != "codes" else logits[:, 0],
@@ -271,4 +320,27 @@ class Server:
                 self.metrics["skipped_tile_dots"]
                 / self.metrics["total_tile_dots"]
             )
+        self._account_modeled_bytes()
         return done
+
+    def _account_modeled_bytes(self) -> None:
+        """Explainability metric: HBM bytes the fused MLP megakernel saves
+        vs the two-kernel path at the REALIZED skip fraction, per the
+        cost model, over all decode-tick MLPs served. (Prefill GEMMs run
+        at different M per prompt and are left out of the model.)"""
+        sp, cfg = self.cfg.sparsity, self.cfg
+        if (
+            sp is None or not sp.enabled or cfg.family not in
+            ("dense", "vlm", "audio") or cfg.mlp_act not in ("relu", "relu2")
+        ):
+            return
+        by = cost_model.mlp_hbm_bytes(
+            self.sc.batch_slots, cfg.d_model, cfg.d_ff, cfg.d_model,
+            block_sparsity=self.metrics["mlp_skip_fraction"],
+            dtype_bytes=2 if cfg.dtype == "bfloat16" else 4,
+            block_m=sp.block_m,
+        )
+        self.metrics["modeled_hbm_bytes_saved"] = float(
+            (by["two_kernel"] - by["fused"])
+            * cfg.num_layers * self.metrics["ticks"]
+        )
