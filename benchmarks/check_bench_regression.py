@@ -1,18 +1,22 @@
-"""CI gate: fail when the fused MLP's modeled HBM bytes regress.
+"""CI gate: fail when deterministic benchmark fields regress.
 
 Usage:
     python benchmarks/check_bench_regression.py BENCH_mlp.json \
         benchmarks/baselines/mlp_baseline.json
+    python benchmarks/check_bench_regression.py BENCH_serve.json \
+        benchmarks/baselines/serve_baseline.json
 
-Compares only the DETERMINISTIC fields (modeled HBM bytes from the cost
-model at the measured sparsity, and the tile-dot skip counts) -- wall
-times are recorded in the JSON for trajectory tracking but never gated,
-so CI noise cannot flake this job. Two invariants are enforced:
+Compares only the DETERMINISTIC fields -- wall times are recorded in the
+JSON for trajectory tracking but never gated, so CI noise cannot flake
+this job. Per benchmark:
 
-  1. No regression: per case, the fused variant's modeled bytes must not
-     exceed the committed baseline (tiny tolerance for float rounding).
-  2. The headline win holds: at >=50% block sparsity the fused variant
-     models >=30% fewer HBM bytes than the two-kernel path.
+  * fused_mlp: the fused variant's modeled HBM bytes must not exceed the
+    committed baseline, and at >=50% block sparsity it must model >=30%
+    fewer bytes than the two-kernel path.
+  * serve_cache_skip: the paged engine must stay token/skip-identical to
+    the contiguous engine (parity bit computed inside the benchmark), KV
+    bytes reserved per generated token must not regress vs the baseline,
+    and the bucketed prefill trace count must not grow.
 """
 from __future__ import annotations
 
@@ -21,6 +25,73 @@ import sys
 
 TOL = 1.001  # modeled bytes are deterministic; allow only float jitter
 MIN_SAVED_AT_50 = 0.30
+
+
+def _check_mlp_case(c, b, failures):
+    got = c["modeled_hbm_bytes"]["fused"]
+    want = b["modeled_hbm_bytes"]["fused"]
+    if got > want * TOL:
+        failures.append(
+            f"{c['case']}: fused modeled HBM bytes regressed "
+            f"{want} -> {got}"
+        )
+    if c["tile_dots"]["skipped"] < b["tile_dots"]["skipped"]:
+        failures.append(
+            f"{c['case']}: tile-dots skipped regressed "
+            f"{b['tile_dots']['skipped']} -> {c['tile_dots']['skipped']}"
+        )
+    if c["sparsity_measured"] >= 0.5:
+        saved = 1.0 - got / c["modeled_hbm_bytes"]["two_kernel"]
+        if saved < MIN_SAVED_AT_50:
+            failures.append(
+                f"{c['case']}: fused saves only {saved:.1%} HBM bytes "
+                f"vs two-kernel (need >={MIN_SAVED_AT_50:.0%})"
+            )
+
+
+def _check_serve_case(c, b, failures):
+    if "parity" in c and not c["parity"]:
+        failures.append(
+            f"{c['case']}: paged engine diverged from contiguous "
+            "(tokens or skip stats differ)"
+        )
+    if "kv_bytes" in c and "kv_bytes" in b:
+        got = c["kv_bytes"]["reserved_per_token_paged"]
+        want = b["kv_bytes"]["reserved_per_token_paged"]
+        if got > want * TOL:
+            failures.append(
+                f"{c['case']}: KV bytes reserved per generated token "
+                f"regressed {want:.0f} -> {got:.0f}"
+            )
+        if c["kv_bytes"]["saved_frac"] < b["kv_bytes"]["saved_frac"] - 1e-6:
+            failures.append(
+                f"{c['case']}: paged reservation saving shrank "
+                f"{b['kv_bytes']['saved_frac']:.3f} -> "
+                f"{c['kv_bytes']['saved_frac']:.3f}"
+            )
+    if "prefill_traces" in c and "prefill_traces" in b:
+        if c["prefill_traces"] > b["prefill_traces"]:
+            failures.append(
+                f"{c['case']}: prefill trace count grew "
+                f"{b['prefill_traces']:.0f} -> {c['prefill_traces']:.0f}"
+            )
+    # Engine-schedule fields (mixed10x4 and friends). decode_tokens is
+    # fixed by the seeded budgets (no EOS traffic), so exact equality is
+    # platform-safe; skip counts depend on float argmax tie-breaks across
+    # BLAS builds, so only their non-vanishing is gated.
+    if "decode_tokens" in c and "decode_tokens" in b:
+        if c["decode_tokens"] != b["decode_tokens"]:
+            failures.append(
+                f"{c['case']}: decode token schedule changed "
+                f"{b['decode_tokens']} -> {c['decode_tokens']}"
+            )
+    if "tile_dots" in c and "tile_dots" in b:
+        if b["tile_dots"]["skipped"] > 0 and c["tile_dots"]["skipped"] <= 0:
+            failures.append(
+                f"{c['case']}: SparCE engine skip work vanished "
+                f"({b['tile_dots']['skipped']} -> "
+                f"{c['tile_dots']['skipped']})"
+            )
 
 
 def main(argv=None) -> int:
@@ -33,6 +104,17 @@ def main(argv=None) -> int:
     with open(argv[1]) as fh:
         base = json.load(fh)
 
+    checker = {
+        "fused_mlp": _check_mlp_case,
+        "serve_cache_skip": _check_serve_case,
+    }.get(cur.get("benchmark"))
+    if checker is None:
+        print(
+            f"REGRESSION GATE BROKEN: no checker for benchmark "
+            f"{cur.get('benchmark')!r}", file=sys.stderr,
+        )
+        return 1
+
     base_cases = {c["case"]: c for c in base["cases"]}
     failures = []
     matched = 0
@@ -41,25 +123,7 @@ def main(argv=None) -> int:
         if b is None:
             continue  # new case: no baseline yet, tracked from next commit
         matched += 1
-        got = c["modeled_hbm_bytes"]["fused"]
-        want = b["modeled_hbm_bytes"]["fused"]
-        if got > want * TOL:
-            failures.append(
-                f"{c['case']}: fused modeled HBM bytes regressed "
-                f"{want} -> {got}"
-            )
-        if c["tile_dots"]["skipped"] < b["tile_dots"]["skipped"]:
-            failures.append(
-                f"{c['case']}: tile-dots skipped regressed "
-                f"{b['tile_dots']['skipped']} -> {c['tile_dots']['skipped']}"
-            )
-        if c["sparsity_measured"] >= 0.5:
-            saved = 1.0 - got / c["modeled_hbm_bytes"]["two_kernel"]
-            if saved < MIN_SAVED_AT_50:
-                failures.append(
-                    f"{c['case']}: fused saves only {saved:.1%} HBM bytes "
-                    f"vs two-kernel (need >={MIN_SAVED_AT_50:.0%})"
-                )
+        checker(c, b, failures)
 
     if matched == 0:
         # A rename/shape change must not silently disable the gate.

@@ -78,8 +78,105 @@ def _run_engine() -> dict:
     }
 
 
+def _run_paged_vs_contiguous() -> dict:
+    """Paged pool vs contiguous reservation on identical seeded traffic.
+
+    Everything gated in CI here is DETERMINISTIC: the traffic is seeded,
+    decode is greedy, and the reservation figures come from the cost
+    model's KV-bytes model -- wall times ride along un-gated. ``parity``
+    asserts the tentpole invariant (token-identical outputs + identical
+    skip accounting across layouts) inside the benchmark itself, so the
+    gate fails if a regression decouples the two engines.
+    """
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core.sparse_ops import SparsityConfig
+    from repro.models import model as model_lib
+    from repro.runtime.server import Request, ServeConfig, Server
+
+    cfg = dataclasses.replace(
+        get_config("smollm-135m").reduced(), mlp_act="relu")
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+
+    def traffic():
+        rng = np.random.default_rng(0)
+        return [
+            Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(2, 14))),
+                    max_new=int(rng.integers(2, 13)))
+            for i in range(8)
+        ]
+
+    sp = SparsityConfig(enabled=True, mode="reference", block_m=1,
+                        block_k=128)
+    outs, mets = {}, {}
+    # paged_full keeps the contiguous admission schedule (worst-case
+    # pool), so tokens AND skip counts must be bit-identical; the
+    # undersized pool delays admissions (by design), so only the TOKEN
+    # streams are required to match there.
+    for name, block, pool in (
+        ("contiguous", 0, None), ("paged_full", 8, None), ("paged", 8, 10),
+    ):
+        srv = Server(cfg, params, ServeConfig(
+            batch_slots=4, max_len=64, sparsity=sp,
+            kv_block_size=block, kv_pool_blocks=pool))
+        done = srv.generate(traffic())
+        outs[name] = {r.uid: np.asarray(r.out) for r in done}
+        mets[name] = dict(srv.metrics)
+
+    def tokens_equal(a, b):
+        return all(np.array_equal(outs[a][uid], outs[b][uid])
+                   for uid in outs[a])
+
+    parity = (
+        tokens_equal("paged", "contiguous")
+        and tokens_equal("paged_full", "contiguous")
+        and (mets["paged_full"]["skipped_tile_dots"]
+             == mets["contiguous"]["skipped_tile_dots"])
+        and (mets["paged_full"]["total_tile_dots"]
+             == mets["contiguous"]["total_tile_dots"])
+    )
+    mp = mets["paged"]
+    per_tok = mp["kv_reserved_bytes_per_token"]
+    contig_per_tok = (
+        mp["kv_bytes_reserved_contiguous"]
+        / max(1.0, mp["decode_tokens"] + mp["admitted"]))
+    emit("serve_paged/8x4_pool10", mp["decode_s"] * 1e6,
+         f"parity={int(parity)};kv_saved={mp['kv_bytes_saved_frac']:.3f};"
+         f"kvB_per_tok={per_tok:.0f};"
+         f"peak_blocks={mp['kv_blocks_peak_in_use']:.0f};"
+         f"traces={mp['prefill_traces']:.0f}")
+    return {
+        "case": "engine/paged_vs_contiguous",
+        "parity": bool(parity),
+        "kv_block_size": 8,
+        "kv_pool_blocks": 10,
+        "kv_bytes": {
+            "reserved_paged": mp["kv_bytes_reserved"],
+            "reserved_contiguous": mp["kv_bytes_reserved_contiguous"],
+            "saved_frac": mp["kv_bytes_saved_frac"],
+            "reserved_per_token_paged": per_tok,
+            "reserved_per_token_contiguous": contig_per_tok,
+        },
+        "pool": {
+            "peak_blocks_in_use": mp["kv_blocks_peak_in_use"],
+            "peak_occupancy": mp["kv_pool_peak_occupancy"],
+            "internal_frag": mp["kv_internal_frag"],
+        },
+        "prefill_traces": mp["prefill_traces"],
+        "decode_tokens": int(mp["decode_tokens"]),
+        "mlp_skip_fraction": mp["mlp_skip_fraction"],
+        "wall_us": {
+            "decode_paged": mets["paged"]["decode_s"] * 1e6,
+            "decode_contiguous": mets["contiguous"]["decode_s"] * 1e6,
+        },
+    }
+
+
 def run(json_path: Optional[str] = None) -> dict:
-    cases = [_run_engine()]
+    cases = [_run_engine(), _run_paged_vs_contiguous()]
     key = jax.random.PRNGKey(0)
     B, L, KV, g, D, bl = 8, 2048, 2, 4, 128, 256
     q = jax.random.normal(key, (B, KV, g, D), jnp.float32)

@@ -20,6 +20,14 @@ serve_launch.main([
     "--batch-slots", "4", "--mixed", "--sparce",
 ])
 
+print("\n== paged KV: oversubscribed block pool (shares HBM across slots) ==")
+serve_launch.main([
+    "--arch", "smollm-135m", "--reduced",
+    "--requests", "6", "--prompt-len", "8", "--max-new", "8",
+    "--batch-slots", "4", "--mixed", "--max-len", "64",
+    "--kv-block-size", "8", "--kv-pool-blocks", "12",
+])
+
 print("\n== audio (EnCodec codebooks, musicgen reduced) ==")
 serve_launch.main([
     "--arch", "musicgen-large", "--reduced",

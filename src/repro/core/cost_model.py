@@ -224,3 +224,45 @@ def mlp_hbm_bytes(
 def model_flops(n_params_active: int, tokens: int) -> float:
     """MODEL_FLOPS = 6 * N_active * D (training); 2*N*D for inference."""
     return 6.0 * n_params_active * tokens
+
+
+# ------------------------------------------------------------- KV-bytes model
+def kv_row_bytes(cfg) -> int:
+    """HBM bytes ONE cached token row costs across all attention layers.
+
+    GQA caches k+v per kv-head; MLA caches the compressed latent plus the
+    shared rope key (the absorbed-decode trick's whole point). ``cfg`` is
+    duck-typed (ArchConfig or anything with the same fields) so this
+    module stays import-free of the config package.
+    """
+    dtype_bytes = 2 if getattr(cfg, "dtype", "bfloat16") == "bfloat16" else 4
+    mla = getattr(cfg, "mla", None)
+    if mla is not None:
+        per_layer = (mla.kv_lora_rank + mla.qk_rope_dim) * dtype_bytes
+    else:
+        per_layer = 2 * cfg.num_kv_heads * cfg.resolved_head_dim * dtype_bytes
+    return per_layer * cfg.num_layers
+
+
+def kv_reservation_bytes(
+    batch_slots: int, max_rows: int, row_bytes: int, *,
+    pool_blocks: int | None = None, block_size: int = 0,
+) -> dict:
+    """Reserved KV HBM: contiguous per-slot layout vs a shared block pool.
+
+    The contiguous layout pins ``batch_slots * max_rows`` rows for the
+    whole serve regardless of traffic -- the stranded-tail problem paging
+    removes. The paged figure is the pool's physical footprint
+    (``pool_blocks * block_size`` rows, null block excluded); sizing the
+    pool below the worst case is how long and short requests share HBM.
+    """
+    contiguous = batch_slots * max_rows * row_bytes
+    if pool_blocks is None or block_size <= 0:
+        paged = contiguous
+    else:
+        paged = pool_blocks * block_size * row_bytes
+    return {
+        "contiguous": int(contiguous),
+        "paged": int(paged),
+        "saved_frac": 1.0 - paged / max(contiguous, 1),
+    }

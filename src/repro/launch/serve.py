@@ -1,12 +1,26 @@
 """Production serving launcher: continuous-batching prefill + decode.
 
     python -m repro.launch.serve --arch smollm-135m --requests 16 \
-        [--reduced] [--max-new 32] [--mixed] [--sparce] [--eos-id N]
+        [--reduced] [--max-new 32] [--mixed] [--sparce] [--eos-id N] \
+        [--kv-block-size 16] [--kv-pool-blocks N] [--prefill-buckets 8,16,32]
 
 --mixed draws per-request prompt lengths and decode budgets from a range
 (the continuous batcher's target workload); --sparce turns on the SparCE
 reference path for the serving MLPs and reports the realized tile-skip
 fraction.
+
+KV paging: by default the server uses a PAGED KV cache -- a shared pool
+of --kv-block-size-row blocks with per-slot block tables, so finished
+requests return their blocks immediately and long/short requests share
+HBM instead of each pinning max_len rows. This is the paper's "skip
+without fetching" principle applied to the cache layer: SparCE only wins
+because the fetch/issue machinery AROUND the skipped MACs is
+reorganized; likewise, skipping a dead slot's decode work only saves HBM
+if the cache stops reserving its tail. --kv-pool-blocks undersizes the
+pool to oversubscribe (admission then waits on the free list, not on
+slots x max_len); --kv-block-size 0 restores the contiguous layout.
+Prompt lengths round up to --prefill-buckets (default: powers of two) so
+the number of compiled prefill traces stays bounded under mixed traffic.
 """
 from __future__ import annotations
 
@@ -42,6 +56,17 @@ def main(argv=None):
                     help="let the engine replan MLP tiling/variant from "
                          "the measured (EMA) block sparsity")
     ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="rows per paged-KV pool block; 0 = contiguous "
+                         "per-slot max_len reservation (legacy layout)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=None,
+                    help="usable KV pool blocks; default sizes the pool "
+                         "for the worst case, smaller oversubscribes HBM "
+                         "and admission waits on the free list")
+    ap.add_argument("--prefill-buckets", default=None,
+                    help="comma-separated prompt-length buckets (padded, "
+                         "masked-tail prefill); default = powers of two "
+                         "up to --max-len; 'off' = exact-length prefill")
     args = ap.parse_args(argv)
 
     import jax
@@ -67,10 +92,19 @@ def main(argv=None):
             autotune=args.sparce_autotune,
         )
     params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed))
+    buckets = None
+    if args.prefill_buckets is not None:
+        buckets = (
+            () if args.prefill_buckets.strip().lower() == "off"
+            else tuple(int(b) for b in args.prefill_buckets.split(","))
+        )
     srv = Server(cfg, params, ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len,
         temperature=args.temperature, eos_id=args.eos_id,
-        seed=args.seed, sparsity=sparsity))
+        seed=args.seed, sparsity=sparsity,
+        kv_block_size=args.kv_block_size,
+        kv_pool_blocks=args.kv_pool_blocks,
+        prefill_buckets=buckets))
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -102,6 +136,24 @@ def main(argv=None):
         print(f"  SparCE mlp_skip_fraction={m['mlp_skip_fraction']:.3f} "
               f"({m['skipped_tile_dots']:.0f}/{m['total_tile_dots']:.0f} "
               f"tile-dots)")
+    if m["kv_paged"]:
+        print(f"  paged KV: {int(m['kv_pool_blocks'])} blocks x "
+              f"{int(m['kv_block_size'])} rows, peak in use "
+              f"{int(m['kv_blocks_peak_in_use'])} "
+              f"(occupancy {m['kv_pool_peak_occupancy']:.2f}, internal "
+              f"frag {m['kv_internal_frag']:.2f})")
+        sf = m["kv_bytes_saved_frac"]
+        # A worst-case-sized pool can exceed the contiguous figure by the
+        # last block's rounding; call that what it is rather than
+        # printing a negative saving.
+        saved = (f"{sf:.1%} saved" if sf >= 0
+                 else f"{-sf:.1%} block-rounding overhead; undersize with "
+                      "--kv-pool-blocks to share HBM")
+        print(f"  KV reserved {m['kv_bytes_reserved']/1e6:.2f} MB paged vs "
+              f"{m['kv_bytes_reserved_contiguous']/1e6:.2f} MB contiguous "
+              f"({saved}, "
+              f"{m['kv_reserved_bytes_per_token']/1e3:.1f} KB/token); "
+              f"{int(m['prefill_traces'])} prefill traces")
     for r in done[:3]:
         s = r.stats
         print(f"  req {r.uid}: ttft={s['ttft_s']*1e3:.1f}ms "

@@ -27,11 +27,79 @@ class KVCache(NamedTuple):
     length: jax.Array  # int32 (B,): tokens already in cache, per slot
 
 
-def _slot_lengths(cache: KVCache, batch: int) -> jax.Array:
+class PagedKVCache(NamedTuple):
+    """Shared pool of fixed-size KV blocks (vLLM-style paging).
+
+    Unlike :class:`KVCache` there is no per-slot ``max_len`` reservation:
+    ``k``/``v`` are pools of ``num_blocks`` blocks of ``block_size`` rows
+    shared by every serving slot, and a slot's rows live wherever its
+    (host-managed) block table points. Block 0 is the NULL block: freed
+    slots' table entries point at it so their masked decode writes land
+    harmlessly. The block table itself is NOT part of the cache pytree --
+    the server owns it host-side and passes it into each decode step,
+    which keeps allocation pure numpy and the device cache donation-safe.
+    """
+
+    k: jax.Array  # (num_blocks, block_size, KV, hd) or (nb, bs, kv_lora)
+    v: jax.Array  # (num_blocks, block_size, KV, hd) or (nb, bs, rope)
+    length: jax.Array  # int32 (B,): tokens already in cache, per slot
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[1]
+
+
+def _slot_lengths(cache, batch: int) -> jax.Array:
     """Per-slot lengths (B,). Accepts legacy scalar-length caches."""
     return jnp.broadcast_to(
         jnp.asarray(cache.length, jnp.int32), (batch,)
     )
+
+
+def _paged_append_and_view(
+    cache: PagedKVCache, block_tables: jax.Array,
+    upd_k: jax.Array, upd_v: jax.Array,
+) -> Tuple[PagedKVCache, jax.Array, jax.Array, jax.Array]:
+    """Write one new row per slot into the pool, gather per-slot views.
+
+    block_tables: int32 (B, max_blocks) pool block ids (0 = unassigned /
+    null). upd_k/upd_v: (B, ...) the decode step's new row per slot.
+    Returns (new_cache, view_k, view_v, idx) where view_* are
+    (B, max_blocks * block_size, ...) contiguous-looking gathers of each
+    slot's blocks and idx the pre-write lengths. Rows gathered from
+    unassigned table entries come from the null block and are masked off
+    by the caller's ``<= idx`` validity mask.
+    """
+    nb, bs = cache.k.shape[0], cache.k.shape[1]
+    B, max_blocks = block_tables.shape
+    idx = _slot_lengths(cache, B)  # (B,)
+    # A live slot's current block is always assigned (the server grows
+    # tables before the tick); dead slots clamp into their null row.
+    slot_blk = jnp.minimum(idx // bs, max_blocks - 1)
+    blk = jnp.take_along_axis(block_tables, slot_blk[:, None], axis=1)[:, 0]
+    row = blk * bs + idx % bs  # (B,) flat pool rows, distinct for live slots
+    kf = cache.k.reshape((nb * bs,) + cache.k.shape[2:])
+    vf = cache.v.reshape((nb * bs,) + cache.v.shape[2:])
+    kf = kf.at[row].set(upd_k.astype(kf.dtype))
+    vf = vf.at[row].set(upd_v.astype(vf.dtype))
+    gather = (block_tables[:, :, None] * bs
+              + jnp.arange(bs, dtype=jnp.int32)[None, None, :])
+    flat_idx = gather.reshape(B, max_blocks * bs)
+    view_k = kf[flat_idx]  # (B, L_view, ...)
+    view_v = vf[flat_idx]
+    new_cache = PagedKVCache(
+        kf.reshape(cache.k.shape), vf.reshape(cache.v.shape), idx + 1
+    )
+    return new_cache, view_k, view_v, idx
+
+
+def _advance_by(idx: jax.Array, S: int, advance) -> jax.Array:
+    """New cache lengths after writing S rows; ``advance`` (int32 (B,))
+    overrides S for bucketed prefill, where only the first ``advance[b]``
+    of the padded rows are real."""
+    if advance is None:
+        return idx + S
+    return idx + jnp.asarray(advance, jnp.int32)
 
 
 def _scatter_rows(buf: jax.Array, upd: jax.Array, starts: jax.Array) -> jax.Array:
@@ -155,11 +223,20 @@ def gqa_forward(
     positions: jax.Array,
     cfg: ArchConfig,
     *,
-    cache: Optional[KVCache] = None,
+    cache=None,
+    block_tables: Optional[jax.Array] = None,
+    advance: Optional[jax.Array] = None,
     chunk_q: Optional[int] = None,
     chunk_k: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[KVCache]]:
-    """x: (B, S, d). With cache and S==1 -> decode step."""
+    """x: (B, S, d). With cache and S==1 -> decode step.
+
+    cache may be a contiguous :class:`KVCache` or a :class:`PagedKVCache`
+    (decode only; prefill always targets a small contiguous cache that
+    admission scatters into pool blocks). ``advance`` (int32 (B,)) is the
+    bucketed-prefill true length: the cache length advances by it rather
+    than by the padded S.
+    """
     B, S, d = x.shape
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     q = jnp.dot(x, params["wq"])
@@ -185,9 +262,17 @@ def gqa_forward(
         # Decode: write k/v at each slot's own length, attend over that
         # slot's live prefix. Per-slot indices are what let the server
         # backfill a freed slot while its neighbours keep decoding.
-        idx = _slot_lengths(cache, B)  # (B,)
-        ck = _scatter_rows(cache.k, k, idx)
-        cv = _scatter_rows(cache.v, v, idx)
+        if isinstance(cache, PagedKVCache):
+            if block_tables is None:
+                raise ValueError("paged decode needs block_tables")
+            new_cache, ck, cv, idx = _paged_append_and_view(
+                cache, block_tables, k[:, 0], v[:, 0]
+            )
+        else:
+            idx = _slot_lengths(cache, B)  # (B,)
+            ck = _scatter_rows(cache.k, k, idx)
+            cv = _scatter_rows(cache.v, v, idx)
+            new_cache = KVCache(ck, cv, idx + 1)
         L = ck.shape[1]
         g = h // kv
         qd = q.reshape(B, kv, g, hd)
@@ -201,16 +286,20 @@ def gqa_forward(
         o = jnp.einsum("bkgl,blkd->bkgd", p.astype(cv.dtype), cv,
                        preferred_element_type=jnp.float32)
         out = o.reshape(B, 1, h, hd).astype(x.dtype)
-        new_cache = KVCache(ck, cv, idx + 1)
     else:
         # Prefill into cache at each slot's current offset.
+        if isinstance(cache, PagedKVCache):
+            raise NotImplementedError(
+                "prefill targets a small contiguous cache; admission "
+                "scatters it into the pool (model.insert_slot_paged)"
+            )
         idx = _slot_lengths(cache, B)
         ck = _scatter_rows(cache.k, k, idx)
         cv = _scatter_rows(cache.v, v, idx)
         out = _flash_chunked(
             q, k, v, q_offset=0, chunk_q=min(chunk_q, S), chunk_k=min(chunk_k, S)
         )
-        new_cache = KVCache(ck, cv, idx + S)
+        new_cache = KVCache(ck, cv, _advance_by(idx, S, advance))
 
     y = jnp.dot(out.reshape(B, S, h * hd), params["wo"])
     return y, new_cache
@@ -221,6 +310,17 @@ def gqa_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
     return KVCache(
         k=jnp.zeros((batch, max_len, kv, hd), dtype),
         v=jnp.zeros((batch, max_len, kv, hd), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def gqa_init_paged_cache(
+    cfg: ArchConfig, batch: int, num_blocks: int, block_size: int, dtype
+) -> PagedKVCache:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return PagedKVCache(
+        k=jnp.zeros((num_blocks, block_size, kv, hd), dtype),
+        v=jnp.zeros((num_blocks, block_size, kv, hd), dtype),
         length=jnp.zeros((batch,), jnp.int32),
     )
 
@@ -252,7 +352,9 @@ def mla_forward(
     positions: jax.Array,
     cfg: ArchConfig,
     *,
-    cache: Optional[KVCache] = None,
+    cache=None,
+    block_tables: Optional[jax.Array] = None,
+    advance: Optional[jax.Array] = None,
     chunk_q: Optional[int] = None,
     chunk_k: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[KVCache]]:
@@ -290,15 +392,28 @@ def mla_forward(
         )[..., :vd]
         new_cache = None
         if cache is not None:
+            if isinstance(cache, PagedKVCache):
+                raise NotImplementedError(
+                    "prefill targets a small contiguous cache; admission "
+                    "scatters it into the pool (model.insert_slot_paged)"
+                )
             idx = _slot_lengths(cache, B)
             cc = _scatter_rows(cache.k, ckv, idx)
             cr = _scatter_rows(cache.v, kr, idx)
-            new_cache = KVCache(cc, cr, idx + S)
+            new_cache = KVCache(cc, cr, _advance_by(idx, S, advance))
     else:
         # Absorbed decode: attention in the compressed latent space.
-        idx = _slot_lengths(cache, B)  # (B,)
-        cc = _scatter_rows(cache.k, ckv, idx)
-        cr = _scatter_rows(cache.v, kr, idx)
+        if isinstance(cache, PagedKVCache):
+            if block_tables is None:
+                raise ValueError("paged decode needs block_tables")
+            new_cache, cc, cr, idx = _paged_append_and_view(
+                cache, block_tables, ckv[:, 0], kr[:, 0]
+            )
+        else:
+            idx = _slot_lengths(cache, B)  # (B,)
+            cc = _scatter_rows(cache.k, ckv, idx)
+            cr = _scatter_rows(cache.v, kr, idx)
+            new_cache = KVCache(cc, cr, idx + 1)
         L = cc.shape[1]
         wuk = params["wuk"].reshape(m.kv_lora_rank, h, nope)
         # q_latent[b,h,r] = sum_n q_nope[b,h,n] * wuk[r,h,n]
@@ -322,7 +437,6 @@ def mla_forward(
         out = jnp.einsum("bhr,rhv->bhv", ctx_lat.astype(wuv.dtype), wuv,
                          preferred_element_type=jnp.float32)
         out = out[:, None].astype(x.dtype)  # (B, 1, h, vd)
-        new_cache = KVCache(cc, cr, idx + 1)
 
     y = jnp.dot(out.reshape(B, S, h * vd).astype(x.dtype), params["wo"])
     return y, new_cache
@@ -333,5 +447,16 @@ def mla_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
     return KVCache(
         k=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
         v=jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def mla_init_paged_cache(
+    cfg: ArchConfig, batch: int, num_blocks: int, block_size: int, dtype
+) -> PagedKVCache:
+    m = cfg.mla
+    return PagedKVCache(
+        k=jnp.zeros((num_blocks, block_size, m.kv_lora_rank), dtype),
+        v=jnp.zeros((num_blocks, block_size, m.qk_rope_dim), dtype),
         length=jnp.zeros((batch,), jnp.int32),
     )

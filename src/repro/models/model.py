@@ -88,7 +88,8 @@ def _embed(params, cfg: ArchConfig, tokens: jax.Array,
     return x
 
 
-def _backbone(params, cfg: ArchConfig, x, positions, caches, active=None):
+def _backbone(params, cfg: ArchConfig, x, positions, caches, active=None,
+              block_tables=None, advance=None):
     if cfg.family == "ssm":
         return tfm.stack_fwd(params["stack"], x, positions, cfg, "ssm",
                              None if caches is None else caches["stack"],
@@ -97,7 +98,7 @@ def _backbone(params, cfg: ArchConfig, x, positions, caches, active=None):
         x, nc, aux = tfm.hybrid_fwd(
             params["hybrid"], x, positions, cfg,
             None if caches is None else caches["hybrid"],
-            active=active,
+            active=active, block_tables=block_tables, advance=advance,
         )
         return x, (None if nc is None else nc), aux
     if cfg.family == "moe":
@@ -107,19 +108,22 @@ def _backbone(params, cfg: ArchConfig, x, positions, caches, active=None):
             dc = None if caches is None else caches["dense_stack"]
             x, ndc, aux = tfm.stack_fwd(
                 params["dense_stack"], x, positions, cfg, "dense", dc,
-                active=active,
+                active=active, block_tables=block_tables, advance=advance,
             )
             aux_total = tfm.aux_add(aux_total, aux)
             new_caches["dense_stack"] = ndc
         mc = None if caches is None else caches["stack"]
         x, nmc, aux = tfm.stack_fwd(params["stack"], x, positions, cfg, "moe",
-                                    mc, active=active)
+                                    mc, active=active,
+                                    block_tables=block_tables,
+                                    advance=advance)
         aux_total = tfm.aux_add(aux_total, aux)
         new_caches["stack"] = nmc
         return x, new_caches, aux_total
     sc = None if caches is None else caches["stack"]
     return tfm.stack_fwd(params["stack"], x, positions, cfg, "dense", sc,
-                         active=active)
+                         active=active, block_tables=block_tables,
+                         advance=advance)
 
 
 def _normalize_backbone_caches(cfg, new_caches):
@@ -160,6 +164,13 @@ def forward(
     mask: embeddings of inactive slots are zeroed, so with a ReLU-family
     MLP their activation rows are all-zero tiles and the SparCE bitmap
     path skips their GEMM work -- freed slots cost no MXU tile-dots.
+
+    batch['block_tables'] (int32 (B, max_blocks), optional) routes paged
+    decode steps: each slot's KV rows live in the pool blocks its table
+    names. batch['advance'] (int32 (B,), optional) is the bucketed-prefill
+    true row count: cache lengths advance by it instead of the padded S,
+    and last_only gathers logits at advance-1 (the last REAL position)
+    rather than the padded tail.
     """
     tokens = batch["tokens"]
     x = _embed(params, cfg, tokens, batch.get("patch_embeds"))
@@ -173,11 +184,29 @@ def forward(
     # Per-slot offsets: each serving slot sits at its own sequence depth.
     offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (B,))
     positions = offset[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    advance = batch.get("advance")
+    if advance is not None and cfg.family not in bucketable_families():
+        # Masked-tail prefill is only exact for position-causal stacks:
+        # SSM/hybrid recurrences would absorb the padded rows and MoE
+        # capacity routing is batch-shape dependent. Fail loudly instead
+        # of desynchronizing cache state.
+        raise ValueError(
+            f"batch['advance'] (bucketed prefill) is not supported for "
+            f"family {cfg.family!r}; prefill at exact length instead"
+        )
     x, new_caches, aux = _backbone(params, cfg, x, positions, caches,
-                                   active=active)
+                                   active=active,
+                                   block_tables=batch.get("block_tables"),
+                                   advance=advance)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if last_only:
-        x = x[:, -1:]
+        if advance is not None:
+            # Bucketed prefill: the last real row sits at advance-1, not
+            # at the padded sequence end.
+            li = jnp.clip(jnp.asarray(advance, jnp.int32) - 1, 0, S - 1)
+            x = jnp.take_along_axis(x, li[:, None, None], axis=1)
+        else:
+            x = x[:, -1:]
     logits = _logits(params, cfg, x)
     return logits, _normalize_backbone_caches(cfg, new_caches), aux
 
@@ -263,17 +292,92 @@ def decode_step(params, cfg: ArchConfig, last_tokens, caches):
     return logits, new_caches
 
 
-def serving_decode_step(params, cfg: ArchConfig, last_tokens, caches, active):
+def serving_decode_step(params, cfg: ArchConfig, last_tokens, caches, active,
+                        block_tables=None):
     """Continuous-batching decode tick.
 
     last_tokens: (B, 1) or (B, K, 1); active: f32 (B,) live-slot mask.
+    block_tables: int32 (B, max_blocks) when the caches are paged -- the
+    host-side allocator's view of which pool blocks each slot owns.
     Returns (logits, new_caches, skip_stats) with skip_stats = f32[2]
     [skipped_tile_dots, total_tile_dots] summed over the MLP GEMMs of
     this step -- the realized SparCE skip work, surfaced by the server.
     """
     batch = {"tokens": last_tokens, "active": active}
+    if block_tables is not None:
+        batch["block_tables"] = block_tables
     logits, new_caches, aux = forward(params, cfg, batch, caches)
     return logits, new_caches, aux["skip"]
+
+
+# ----------------------------------------------------------------- paged KV
+def paged_families() -> Tuple[str, ...]:
+    """Families whose serving caches are pure attention-KV stacks and can
+    be paged. SSM/hybrid states are fixed-size recurrences (no per-token
+    rows to page); they keep the contiguous layout."""
+    return ("dense", "vlm", "audio", "moe")
+
+
+def bucketable_families() -> Tuple[str, ...]:
+    """Families for which padded-to-bucket prefill is EXACT: every
+    cross-position op is position-causal, so masked tail positions cannot
+    perturb real ones. MoE is excluded (capacity routing is batch-shape
+    dependent) as are SSM/hybrid (their recurrent prefill state would
+    absorb the padded positions)."""
+    return ("dense", "vlm", "audio")
+
+
+def init_paged_caches(cfg: ArchConfig, batch: int, num_blocks: int,
+                      block_size: int) -> Dict[str, Any]:
+    """Pool-backed serving caches: ``num_blocks`` INCLUDES the reserved
+    null block 0 (allocatable ids are 1..num_blocks-1)."""
+    if cfg.family not in paged_families():
+        raise ValueError(f"family {cfg.family!r} has no paged KV layout")
+    if cfg.family == "moe":
+        caches = {"stack": tfm.stack_init_paged_caches(
+            cfg, cfg.num_layers - cfg.first_k_dense, batch, num_blocks,
+            block_size)}
+        if cfg.first_k_dense:
+            caches["dense_stack"] = tfm.stack_init_paged_caches(
+                cfg, cfg.first_k_dense, batch, num_blocks, block_size)
+        return caches
+    return {"stack": tfm.stack_init_paged_caches(
+        cfg, cfg.num_layers, batch, num_blocks, block_size)}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def insert_slot_paged(big, small, slot, block_ids, true_len):
+    """Admission for the paged layout: scatter a freshly prefilled
+    batch=1 CONTIGUOUS cache's rows into the pool blocks ``block_ids``
+    and pin slot ``slot``'s length to ``true_len``.
+
+    ``small`` rows beyond the allocated blocks (bucket padding) map to
+    table entries of 0 and land in the null block -- harmless by
+    construction. ``slot``/``true_len`` are traced scalars and
+    ``block_ids`` a traced (max_blocks,) vector, so admission costs one
+    trace per PREFILL BUCKET, not per slot or per allocation pattern.
+    The pool is donated: XLA updates it in place.
+    """
+
+    def one_stack(bp, sp):
+        # bp: PagedKVCache stacked over layers; sp: KVCache stacked.
+        def scat(pool, rows):
+            # pool: (Lyr, nb, bs, *r); rows: (Lyr, 1, S, *r)
+            nb, bs = pool.shape[1], pool.shape[2]
+            S = rows.shape[2]
+            p = jnp.arange(S, dtype=jnp.int32)
+            dest = block_ids[p // bs] * bs + p % bs
+            flat = pool.reshape((pool.shape[0], nb * bs) + pool.shape[3:])
+            flat = jax.vmap(
+                lambda f, r: f.at[dest].set(r.astype(f.dtype))
+            )(flat, rows[:, 0])
+            return flat.reshape(pool.shape)
+
+        length = bp.length.at[:, slot].set(
+            jnp.asarray(true_len, jnp.int32))
+        return type(bp)(scat(bp.k, sp.k), scat(bp.v, sp.v), length)
+
+    return {key: one_stack(big[key], small[key]) for key in big}
 
 
 @functools.partial(jax.jit, static_argnames=("slot",), donate_argnums=(0,))

@@ -24,8 +24,8 @@ from repro.models import modules as nn
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models.attention import (
-    KVCache, attn_init, gqa_forward, gqa_init_cache,
-    mla_forward, mla_init, mla_init_cache,
+    KVCache, attn_init, gqa_forward, gqa_init_cache, gqa_init_paged_cache,
+    mla_forward, mla_init, mla_init_cache, mla_init_paged_cache,
 )
 from repro.models.layers import mlp_fwd, mlp_init, rmsnorm, rmsnorm_init
 from repro.parallel.sharding import constrain
@@ -80,7 +80,7 @@ def block_init(key, cfg: ArchConfig, kind: str):
 
 def block_fwd(
     params, x, positions, cfg: ArchConfig, kind: str,
-    cache=None, active=None,
+    cache=None, active=None, block_tables=None, advance=None,
 ) -> Tuple[jax.Array, Any, dict]:
     """Returns (x, new_cache, aux) with aux = {'loss', 'skip'}.
 
@@ -108,7 +108,8 @@ def block_fwd(
     attn_fn = mla_forward if cfg.mla is not None else gqa_forward
     h, new_cache = attn_fn(
         params["attn"], rmsnorm(params["attn_norm"], x, cfg.norm_eps),
-        positions, cfg, cache=cache,
+        positions, cfg, cache=cache, block_tables=block_tables,
+        advance=advance,
     )
     x = x + gate(h)
     hn = rmsnorm(params["mlp_norm"], x, cfg.norm_eps)
@@ -141,7 +142,7 @@ def _maybe_remat(fn, cfg: ArchConfig):
 
 def stack_fwd(
     stacked, x, positions, cfg: ArchConfig, kind: str, caches=None,
-    active=None,
+    active=None, block_tables=None, advance=None,
 ):
     """Scan over layers (scan_layers=True, compact HLO for 61-81 layer
     stacks) or unrolled python loop (scan_layers=False -- used by the
@@ -154,7 +155,7 @@ def stack_fwd(
         layer_params, layer_cache = xs
         h, new_cache, a = block_fwd(
             layer_params, h, positions, cfg, kind, cache=layer_cache,
-            active=active,
+            active=active, block_tables=block_tables, advance=advance,
         )
         if cfg.seq_shard and h.ndim == 3 and h.shape[1] > 1:
             # Megatron-style sequence parallelism between blocks: the
@@ -211,6 +212,21 @@ def stack_init_caches(cfg: ArchConfig, n_layers: int, kind: str,
     )
 
 
+def stack_init_paged_caches(cfg: ArchConfig, n_layers: int, batch: int,
+                            num_blocks: int, block_size: int):
+    """Layer-stacked paged KV pools: each layer owns its own block pool,
+    but block tables (host-side, in the server) are shared across layers
+    -- a slot's rows sit at the same pool coordinates in every layer."""
+    dtype = _dt(cfg)
+    if cfg.mla is not None:
+        c = mla_init_paged_cache(cfg, batch, num_blocks, block_size, dtype)
+    else:
+        c = gqa_init_paged_cache(cfg, batch, num_blocks, block_size, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n_layers,) + a.shape), c
+    )
+
+
 # ------------------------------------------------------- zamba2-style hybrid
 def hybrid_init(key, cfg: ArchConfig):
     """n_super groups of [attn_every ssm layers + shared attn block],
@@ -233,7 +249,12 @@ def hybrid_init(key, cfg: ArchConfig):
 
 
 def hybrid_fwd(params, x, positions, cfg: ArchConfig, caches=None,
-               active=None):
+               active=None, block_tables=None, advance=None):
+    # ``advance`` is accepted for signature uniformity with stack_fwd but
+    # must be None here: model.forward rejects bucketed prefill for the
+    # hybrid family (the ssm sublayers would absorb padded rows), so it
+    # is deliberately NOT threaded into the blocks below.
+    assert advance is None, "hybrid prefill is exact-length only"
     """caches: dict(ssm=(n_super, every, ...), attn=(n_super, ...),
     trailing=(trailing, ...))."""
     every = cfg.attn_every
@@ -249,7 +270,7 @@ def hybrid_fwd(params, x, positions, cfg: ArchConfig, caches=None,
                                    ssm_c, active=active)
         attn_c = None if group_caches is None else group_caches["attn"]
         h, new_attn, a2 = block_fwd(
-            shared, h, positions, cfg, "dense", cache=attn_c, active=active
+            shared, h, positions, cfg, "dense", cache=attn_c, active=active,
         )
         new_c = None if group_caches is None else {"ssm": new_ssm, "attn": new_attn}
         return (h, aux_add(aux_add(aux, a1), a2)), new_c

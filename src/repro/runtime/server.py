@@ -3,11 +3,14 @@
 ``Server`` keeps ``batch_slots`` decode slots over ONE shared, layer-
 stacked KV/SSM cache with per-slot lengths. The engine loop is:
 
-  1. admission -- while a slot is free and requests are pending, prefill
-     the next request alone (batch=1, exact prompt length, logits for the
-     last position only) and scatter its cache into the free slot
-     (:func:`model.insert_slot_caches`); its first token is sampled from
-     the prefill logits.
+  1. admission -- while a slot is free, the queue head's worst-case KV
+     need fits the block pool, and requests are pending: prefill the next
+     request alone (batch=1, prompt padded up to a small set of BUCKETS,
+     logits gathered at the last REAL position) and scatter its cache
+     into the free slot (:func:`model.insert_slot_paged` /
+     :func:`model.insert_slot_caches`); its first token is sampled from
+     the prefill logits. Bucketing bounds the number of jit traces at
+     ``len(buckets)`` under arbitrary prompt-length traffic.
   2. decode tick -- ONE jitted :func:`model.serving_decode_step` for all
      slots, threading the active-slot mask through the model. Inactive
      slots' embeddings are zeroed, so under a ReLU-family MLP their
@@ -16,22 +19,33 @@ stacked KV/SSM cache with per-slot lengths. The engine loop is:
      paper's dynamic zero-operand skipping applied to the serving hot
      path. ``decode_tokens`` counts only live slots.
   3. release -- a slot is freed the moment its request hits EOS or its
-     own ``max_new`` budget, and the next pending request backfills it on
-     the same engine iteration. No slot ever idles through another
-     request's tail.
+     own ``max_new`` budget, its KV blocks go back to the pool free list,
+     and the next pending request backfills it on the same engine
+     iteration. No slot ever idles through another request's tail, and no
+     HBM stays reserved for a finished request's unused ``max_len`` tail.
+
+KV layout: by default the caches are PAGED (``ServeConfig.kv_block_size``
+rows per block, vLLM-style) -- a shared pool of fixed-size blocks plus a
+host-side block table per slot, so long and short requests share HBM and
+admission is gated on BLOCKS, not slots x max_len. The paper's "skip
+without fetching" principle applied to the cache layer: the machinery
+around the skip (here: admission, memory reservation) is reorganized so
+the savings the skip earns are not given back as stranded cache rows.
+``kv_block_size=0`` restores the contiguous per-slot layout; outputs and
+skip statistics are token-identical across both (tested).
 
 Sampling is vectorized (Gumbel-max over the whole slot batch; greedy is
 pure argmax), so there is no per-row Python sampling loop. The server
 reports engine metrics (ticks, active-token counts, realized MLP
-tile-skip fraction from the SASA accounting) and per-request latency /
-throughput.
+tile-skip fraction, pool occupancy/fragmentation, prefill trace count)
+and per-request latency / throughput.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +55,9 @@ from repro.configs.base import ArchConfig
 from repro.core import cost_model, sasa
 from repro.core.sparse_ops import SparsityConfig
 from repro.models import model as model_lib
+from repro.runtime.paging import (
+    BlockAllocator, blocks_needed, pick_bucket, resolve_buckets,
+)
 
 
 @dataclasses.dataclass
@@ -65,6 +82,19 @@ class ServeConfig:
     # cfg.sparsity for prefill+decode so the MLP GEMMs run sparce_matmul
     # with producer-fused ReLU bitmaps (and dead-slot rows skip).
     sparsity: Optional[SparsityConfig] = None
+    # --- paged KV cache ---------------------------------------------------
+    # Rows per KV pool block; 0 = legacy contiguous per-slot reservation.
+    # (SSM/hybrid families fall back to contiguous automatically: their
+    # recurrent state has no per-token rows to page.)
+    kv_block_size: int = 16
+    # Usable pool blocks (excluding the reserved null block). None sizes
+    # the pool for the worst case (batch_slots full slots); smaller pools
+    # oversubscribe HBM and admission waits on the free list instead.
+    kv_pool_blocks: Optional[int] = None
+    # Prefill buckets (prompt lengths round UP to the nearest bucket with
+    # masked tail positions). None = powers-of-two up to max_len; () =
+    # exact-length prefill (one trace per distinct prompt length).
+    prefill_buckets: Optional[Tuple[int, ...]] = None
 
 
 @dataclasses.dataclass
@@ -74,6 +104,9 @@ class _Slot:
     t_admit: float
     t_first: float
     ticks: int = 0
+    cache_len: int = 0  # rows currently in this slot's cache
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    commit: int = 0  # worst-case pool blocks promised to this request
 
 
 class Server:
@@ -83,6 +116,31 @@ class Server:
         if serve_cfg.sparsity is not None:
             cfg = dataclasses.replace(cfg, sparsity=serve_cfg.sparsity)
         self.cfg, self.params, self.sc = cfg, params, serve_cfg
+        self._paged = (
+            serve_cfg.kv_block_size > 0
+            and cfg.family in model_lib.paged_families()
+        )
+        # Prompt rows share the cache with the (constant) patch prefix.
+        self._patch_rows = (
+            cfg.num_patches if cfg.frontend == "patches" else 0
+        )
+        self._max_rows = serve_cfg.max_len + self._patch_rows
+        if self._paged:
+            self._max_blocks = blocks_needed(
+                self._max_rows, serve_cfg.kv_block_size)
+            self._pool_usable = (
+                serve_cfg.kv_pool_blocks
+                if serve_cfg.kv_pool_blocks is not None
+                else serve_cfg.batch_slots * self._max_blocks
+            )
+        else:
+            self._max_blocks = 0
+            self._pool_usable = 0
+        if cfg.family in model_lib.bucketable_families():
+            self._buckets = resolve_buckets(
+                serve_cfg.prefill_buckets, serve_cfg.max_len)
+        else:
+            self._buckets = ()
         # Step fns memoised per sparsity bucket: re-entering a bucket the
         # engine has already planned for reuses its jitted fns (and their
         # trace caches) instead of recompiling -- an EMA hovering at a
@@ -96,6 +154,7 @@ class Server:
         # bucket move; plans themselves come from the process cache).
         self._ema = sasa.SparsityEMA()
         self._rng = np.random.default_rng(serve_cfg.seed)
+        self._prefill_shapes: set = set()
         self.metrics: Dict[str, float] = {
             "prefill_tokens": 0, "decode_tokens": 0, "ticks": 0,
             "admitted": 0, "completed": 0,
@@ -103,7 +162,22 @@ class Server:
             "mlp_skip_fraction": 0.0,
             "prefill_s": 0.0, "decode_s": 0.0,
             "replans": 0, "modeled_hbm_bytes_saved": 0.0,
+            # Paged-KV pool telemetry (zeros in contiguous mode).
+            "kv_paged": float(self._paged),
+            "kv_block_size": float(serve_cfg.kv_block_size if self._paged
+                                   else 0),
+            "kv_pool_blocks": float(self._pool_usable),
+            "kv_blocks_peak_in_use": 0.0,
+            "kv_pool_peak_occupancy": 0.0,
+            "kv_internal_frag": 0.0,
+            "kv_bytes_reserved": 0.0,
+            "kv_bytes_reserved_contiguous": 0.0,
+            "kv_bytes_saved_frac": 0.0,
+            "kv_reserved_bytes_per_token": 0.0,
+            "prefill_traces": 0.0,
         }
+        self._frag_sum = 0.0
+        self._frag_ticks = 0
 
     def _build_step_fns(self) -> None:
         cfg, serve_cfg = self.cfg, self.sc
@@ -115,14 +189,31 @@ class Server:
         if hit is not None:
             self._decode, self._prefill = hit
             return
-        self._decode = jax.jit(
-            lambda p, toks, caches, active: model_lib.serving_decode_step(
-                p, cfg, toks, caches, active
+        if self._paged:
+            self._decode = jax.jit(
+                lambda p, toks, caches, active, tables:
+                model_lib.serving_decode_step(
+                    p, cfg, toks, caches, active, tables
+                )
             )
-        )
+        else:
+            self._decode = jax.jit(
+                lambda p, toks, caches, active:
+                model_lib.serving_decode_step(
+                    p, cfg, toks, caches, active
+                )
+            )
+        paged = self._paged
+        patch_rows = self._patch_rows
 
         def _prefill_fn(p, batch):
-            caches = model_lib.init_caches(cfg, 1, serve_cfg.max_len)
+            # Paged mode sizes the scratch cache at the (bucketed) prompt
+            # itself -- the rows are immediately re-scattered into pool
+            # blocks, so no max_len reservation ever exists. Contiguous
+            # mode must match the big cache's row count for insertion.
+            rows = batch["tokens"].shape[-1] + patch_rows
+            small_len = rows if paged else serve_cfg.max_len + patch_rows
+            caches = model_lib.init_caches(cfg, 1, small_len)
             logits, new_caches, aux = model_lib.forward(
                 p, cfg, batch, caches, last_only=True
             )
@@ -164,16 +255,43 @@ class Server:
         return np.argmax(z + g, axis=-1)
 
     # ----------------------------------------------------------- admission
-    def _prefill_one(self, r: Request, slot: int, caches):
-        """Prefill one request alone and scatter it into ``slot``."""
+    def _request_need(self, r: Request) -> Tuple[int, int]:
+        """(prompt_rows, worst_case_rows) a request puts in its cache.
+
+        Decode tick j writes token j at row prompt+j-1; the final sampled
+        token is never written, so the worst case is
+        prompt + max(1, max_new) - 1 rows (plus the vlm patch prefix).
+        """
+        rows0 = int(np.asarray(r.prompt).shape[-1]) + self._patch_rows
+        return rows0, rows0 + max(1, r.max_new) - 1
+
+    def _prefill_one(self, r: Request, slot: int, caches,
+                     block_ids: Optional[List[int]] = None):
+        """Prefill one request alone and scatter it into ``slot``.
+
+        The prompt is padded up to its bucket (masked-tail positions):
+        the cache length still advances by the TRUE length and logits are
+        gathered at the last real position, so the result is bit-for-bit
+        the exact-length prefill while the jit trace count stays bounded
+        by ``len(buckets)``.
+        """
         cfg = self.cfg
         prompt = np.asarray(r.prompt)
         S = int(prompt.shape[-1])
+        S_pad = pick_bucket(S, self._buckets) if self._buckets else S
         if cfg.frontend == "codes":
-            toks = prompt.reshape(1, cfg.num_codebooks, S).astype(np.int32)
+            toks = np.zeros((1, cfg.num_codebooks, S_pad), np.int32)
+            toks[0, :, :S] = prompt.reshape(cfg.num_codebooks, S)
         else:
-            toks = prompt.reshape(1, S).astype(np.int32)
+            toks = np.zeros((1, S_pad), np.int32)
+            toks[0, :S] = prompt.reshape(S)
+        rows0 = S + self._patch_rows
         batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family in model_lib.bucketable_families():
+            # Exact-length families (ssm/hybrid/moe) never pad, so their
+            # prefill advances by S implicitly; forward rejects 'advance'
+            # for them outright.
+            batch["advance"] = jnp.asarray([rows0], jnp.int32)
         if cfg.frontend == "patches":
             batch["patch_embeds"] = jnp.zeros(
                 (1, cfg.num_patches, cfg.d_model),
@@ -181,7 +299,19 @@ class Server:
             )
         t0 = time.perf_counter()
         logits, small, skip = self._prefill(self.params, batch)
-        caches = model_lib.insert_slot_caches(caches, small, slot)
+        # Host-side trace ledger: one entry per (jitted fn, shape), so it
+        # counts replan retraces too and stays a faithful fallback if the
+        # jit-cache probe (_cache_size, a private JAX API) ever goes away.
+        self._prefill_shapes.add((id(self._prefill), cfg.frontend, S_pad))
+        if self._paged:
+            ids = np.zeros((self._max_blocks,), np.int32)
+            ids[: len(block_ids)] = block_ids
+            caches = model_lib.insert_slot_paged(
+                caches, small, jnp.int32(slot), jnp.asarray(ids),
+                jnp.int32(rows0),
+            )
+        else:
+            caches = model_lib.insert_slot_caches(caches, small, slot)
         self.metrics["prefill_s"] += time.perf_counter() - t0
         self.metrics["prefill_tokens"] += S
         self.metrics["admitted"] += 1
@@ -214,10 +344,10 @@ class Server:
 
     # -------------------------------------------------------------- engine
     def _validate(self, requests: List[Request]) -> None:
-        """Reject requests that cannot fit a cache slot BEFORE admitting
-        any: a slot holds prompt + decoded tokens contiguously (no KV
-        paging yet), and decode writes past max_len would silently clamp
-        onto the last cache row."""
+        """Reject requests that cannot EVER fit BEFORE admitting any: a
+        slot's rows (prompt + decoded tokens) must fit max_len, and in
+        paged mode the request's worst-case block need must fit the whole
+        pool (otherwise it would wait on the free list forever)."""
         for r in requests:
             need = int(np.asarray(r.prompt).shape[-1]) + max(1, r.max_new)
             if need > self.sc.max_len:
@@ -226,13 +356,31 @@ class Server:
                     f"tokens do not fit a max_len={self.sc.max_len} cache "
                     "slot; raise ServeConfig.max_len or lower max_new"
                 )
+            if self._paged:
+                _, worst = self._request_need(r)
+                nb = blocks_needed(worst, self.sc.kv_block_size)
+                if nb > self._pool_usable:
+                    raise ValueError(
+                        f"request uid={r.uid}: worst case {nb} KV blocks "
+                        f"do not fit the {self._pool_usable}-block pool; "
+                        "raise ServeConfig.kv_pool_blocks"
+                    )
 
     def generate(self, requests: List[Request]) -> List[Request]:
         """Serve requests through the continuous-batching engine."""
         cfg, sc = self.cfg, self.sc
         self._validate(requests)
         B = sc.batch_slots
-        caches = model_lib.init_caches(cfg, B, sc.max_len)
+        paged = self._paged
+        if paged:
+            caches = model_lib.init_paged_caches(
+                cfg, B, self._pool_usable + 1, sc.kv_block_size)
+            alloc: Optional[BlockAllocator] = BlockAllocator(
+                self._pool_usable)
+            tables = np.zeros((B, self._max_blocks), np.int32)
+        else:
+            caches = model_lib.init_caches(cfg, B, self._max_rows)
+            alloc, tables = None, None
         pending = deque(requests)
         slots: List[Optional[_Slot]] = [None] * B
         if cfg.frontend == "codes":
@@ -241,23 +389,56 @@ class Server:
             cur_tok = np.zeros((B,), np.int32)
         done: List[Request] = []
 
+        def outstanding() -> int:
+            """Blocks promised to live requests but not yet allocated --
+            lazy growth draws on these, so admission must leave them."""
+            return sum(
+                s.commit - len(s.blocks) for s in slots if s is not None
+            )
+
         def release(i: int):
             self._finish(slots[i], time.perf_counter())
             done.append(slots[i].req)
+            if paged and slots[i].blocks:
+                alloc.free(slots[i].blocks)
+                tables[i, :] = 0
             slots[i] = None
 
         while pending or any(s is not None for s in slots):
-            # 1. Admission: backfill every free slot from the queue.
+            # 1. Admission: backfill free slots from the queue head while
+            #    the POOL (not slots x max_len) has room for the worst
+            #    case. FIFO: a too-big head blocks later requests, which
+            #    keeps admission order (and thus outputs) deterministic.
             for i in range(B):
                 if slots[i] is not None or not pending:
                     continue
-                r = pending.popleft()
+                r = pending[0]
+                block_ids: Optional[List[int]] = None
+                rows0, worst = self._request_need(r)
+                commit = 0
+                if paged:
+                    commit = blocks_needed(worst, sc.kv_block_size)
+                    if alloc.available - outstanding() < commit:
+                        break  # pool full: wait for a release
+                    block_ids = alloc.alloc(
+                        blocks_needed(rows0, sc.kv_block_size))
+                    tables[i, : len(block_ids)] = block_ids
+                    # Sample the peak here too: requests that finish on
+                    # their prefill token never reach a decode tick but
+                    # still occupied pool blocks.
+                    self.metrics["kv_blocks_peak_in_use"] = max(
+                        self.metrics["kv_blocks_peak_in_use"],
+                        float(alloc.in_use))
+                pending.popleft()
                 t0 = time.perf_counter()
-                last_logits, caches = self._prefill_one(r, i, caches)
+                last_logits, caches = self._prefill_one(
+                    r, i, caches, block_ids)
                 first = self._sample(last_logits)  # () or (K,)
                 slots[i] = _Slot(
                     req=r, produced=[np.asarray(first)],
                     t_admit=t0, t_first=time.perf_counter(),
+                    cache_len=rows0,
+                    blocks=block_ids or [], commit=commit,
                 )
                 cur_tok[i] = first
                 if len(slots[i].produced) >= r.max_new or self._hit_eos(
@@ -274,6 +455,28 @@ class Server:
                 break
 
             # 2. One fused decode tick for all slots (dead slots masked).
+            if paged:
+                # Lazy growth: a slot crossing a block edge claims its
+                # next pool block only when the write reaches it. The
+                # admission-time commitment guarantees the free list can
+                # cover every live slot's growth.
+                for i, s in enumerate(slots):
+                    if s is None:
+                        continue
+                    blk_idx = s.cache_len // sc.kv_block_size
+                    if blk_idx >= len(s.blocks):
+                        (new_blk,) = alloc.alloc(1)
+                        s.blocks.append(new_blk)
+                        tables[i, blk_idx] = new_blk
+                self.metrics["kv_blocks_peak_in_use"] = max(
+                    self.metrics["kv_blocks_peak_in_use"],
+                    float(alloc.in_use))
+                used_rows = sum(
+                    s.cache_len + 1 for s in slots if s is not None)
+                cap_rows = alloc.in_use * sc.kv_block_size
+                if cap_rows:
+                    self._frag_sum += 1.0 - used_rows / cap_rows
+                    self._frag_ticks += 1
             step = np.where(
                 active.astype(bool)[:, None] if cur_tok.ndim > 1
                 else active.astype(bool),
@@ -284,9 +487,15 @@ class Server:
             else:
                 step_toks = jnp.asarray(step)[:, None]  # (B, 1)
             t0 = time.perf_counter()
-            logits, caches, skip = self._decode(
-                self.params, step_toks, caches, jnp.asarray(active)
-            )
+            if paged:
+                logits, caches, skip = self._decode(
+                    self.params, step_toks, caches, jnp.asarray(active),
+                    jnp.asarray(tables),
+                )
+            else:
+                logits, caches, skip = self._decode(
+                    self.params, step_toks, caches, jnp.asarray(active)
+                )
             self.metrics["decode_s"] += time.perf_counter() - t0
             self.metrics["ticks"] += 1
             self.metrics["decode_tokens"] += n_active
@@ -310,6 +519,7 @@ class Server:
                 tok = np.asarray(nxt[i])
                 s.produced.append(tok)
                 s.ticks += 1
+                s.cache_len += 1  # this tick wrote cur_tok at cache_len
                 cur_tok[i] = tok
                 if len(s.produced) >= s.req.max_new or self._hit_eos(
                         s.req, tok):
@@ -321,7 +531,44 @@ class Server:
                 / self.metrics["total_tile_dots"]
             )
         self._account_modeled_bytes()
+        self._account_kv_bytes()
         return done
+
+    def prefill_trace_count(self) -> int:
+        """Compiled prefill traces across all sparsity buckets -- the
+        quantity prefill bucketing bounds (probed from the jit cache,
+        cross-checked against the host-side shape set)."""
+        n = 0
+        for _, pre in self._step_fn_cache.values():
+            cache_size = getattr(pre, "_cache_size", None)
+            if cache_size is not None:
+                n += int(cache_size())
+        return max(n, len(self._prefill_shapes))
+
+    def _account_kv_bytes(self) -> None:
+        """KV reservation telemetry: what the pool actually holds vs what
+        the contiguous layout would have pinned for the same slots."""
+        row_b = cost_model.kv_row_bytes(self.cfg)
+        res = cost_model.kv_reservation_bytes(
+            self.sc.batch_slots, self._max_rows, row_b,
+            pool_blocks=self._pool_usable if self._paged else None,
+            block_size=self.sc.kv_block_size if self._paged else 0,
+        )
+        self.metrics["kv_bytes_reserved"] = float(res["paged"])
+        self.metrics["kv_bytes_reserved_contiguous"] = float(
+            res["contiguous"])
+        self.metrics["kv_bytes_saved_frac"] = float(res["saved_frac"])
+        generated = self.metrics["decode_tokens"] + self.metrics["admitted"]
+        if generated:
+            self.metrics["kv_reserved_bytes_per_token"] = (
+                float(res["paged"]) / generated)
+        if self._pool_usable:
+            self.metrics["kv_pool_peak_occupancy"] = (
+                self.metrics["kv_blocks_peak_in_use"] / self._pool_usable)
+        if self._frag_ticks:
+            self.metrics["kv_internal_frag"] = (
+                self._frag_sum / self._frag_ticks)
+        self.metrics["prefill_traces"] = float(self.prefill_trace_count())
 
     def _account_modeled_bytes(self) -> None:
         """Explainability metric: HBM bytes the fused MLP megakernel saves

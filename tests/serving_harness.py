@@ -1,0 +1,129 @@
+"""Deterministic serving test harness shared by all serving tests.
+
+Three pieces:
+
+  * :func:`make_traffic` -- a SEEDED traffic generator: prompt lengths,
+    decode budgets, contents and (optional) EOS ids all come from one
+    ``np.random.default_rng(seed)``, so every test (and the serving
+    benchmark) can replay byte-identical workloads across cache layouts,
+    sparsity modes and refactors.
+  * :func:`oracle_rollout` / :func:`oracle_outputs` -- a cache-free
+    greedy oracle: token-by-token argmax over the FULL-sequence forward.
+    The engine (any layout) must reproduce it exactly; this is the
+    serving analogue of the paper's losslessness contract.
+  * :func:`run_and_check` -- run a :class:`Server` over traffic and
+    assert outputs match the oracle, returning (done, metrics) for
+    engine-level assertions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.runtime.server import Request, ServeConfig, Server
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """Seeded workload description (all ranges inclusive)."""
+
+    n_requests: int = 6
+    prompt_lens: Tuple[int, int] = (2, 12)
+    max_new: Tuple[int, int] = (1, 8)
+    seed: int = 0
+    # Probability a request carries an eos_id drawn from the vocab (the
+    # engine may then stop early; the oracle stops at the same token).
+    eos_prob: float = 0.0
+
+
+def make_traffic(cfg, traffic: Traffic) -> List[Request]:
+    """Deterministic request list for ``cfg`` (text or codes frontend)."""
+    rng = np.random.default_rng(traffic.seed)
+    reqs = []
+    for i in range(traffic.n_requests):
+        plen = int(rng.integers(traffic.prompt_lens[0],
+                                traffic.prompt_lens[1] + 1))
+        max_new = int(rng.integers(traffic.max_new[0],
+                                   traffic.max_new[1] + 1))
+        if cfg.frontend == "codes":
+            prompt = rng.integers(
+                0, cfg.vocab_size, (cfg.num_codebooks, plen))
+        else:
+            prompt = rng.integers(0, cfg.vocab_size, plen)
+        eos = None
+        if traffic.eos_prob and rng.random() < traffic.eos_prob:
+            eos = int(rng.integers(0, cfg.vocab_size))
+        reqs.append(Request(uid=i, prompt=prompt, max_new=max_new,
+                            eos_id=eos))
+    return reqs
+
+
+def oracle_rollout(params, cfg, prompt: np.ndarray, max_new: int,
+                   eos_id: Optional[int] = None) -> np.ndarray:
+    """Greedy rollout with NO cache: re-run the full-sequence forward for
+    every generated token. Slow and obviously correct -- the reference
+    the engine's cache machinery (contiguous or paged, bucketed or exact
+    prefill) must match token for token."""
+    prompt = np.asarray(prompt)
+    if cfg.frontend == "codes":
+        toks = prompt.reshape(cfg.num_codebooks, -1).astype(np.int32)
+        out: List[np.ndarray] = []
+        for _ in range(max_new):
+            logits, _, _ = model_lib.forward(
+                params, cfg, {"tokens": jnp.asarray(toks[None])})
+            nxt = np.argmax(
+                np.asarray(logits[0, -1], np.float32), axis=-1
+            ).astype(np.int32)  # (K,)
+            out.append(nxt)
+            toks = np.concatenate([toks, nxt[:, None]], axis=1)
+            if eos_id is not None and np.all(nxt == eos_id):
+                break
+        return np.array(out)
+    toks = list(prompt.reshape(-1).astype(int))
+    out_t: List[int] = []
+    for _ in range(max_new):
+        logits, _, _ = model_lib.forward(
+            params, cfg, {"tokens": jnp.asarray([toks], jnp.int32)})
+        nxt = int(np.argmax(np.asarray(logits[0, -1], np.float32)))
+        out_t.append(nxt)
+        toks.append(nxt)
+        if eos_id is not None and nxt == eos_id:
+            break
+    return np.array(out_t)
+
+
+def oracle_outputs(params, cfg, requests: List[Request],
+                   default_eos: Optional[int] = None) -> Dict[int, np.ndarray]:
+    return {
+        r.uid: oracle_rollout(
+            params, cfg, r.prompt, r.max_new,
+            r.eos_id if r.eos_id is not None else default_eos)
+        for r in requests
+    }
+
+
+def run_server(cfg, params, serve_cfg: ServeConfig,
+               requests: List[Request]):
+    """Fresh server over the given traffic; returns (done, metrics, srv)."""
+    srv = Server(cfg, params, serve_cfg)
+    done = srv.generate(list(requests))
+    return done, srv.metrics, srv
+
+
+def run_and_check(cfg, params, serve_cfg: ServeConfig,
+                  requests: List[Request]):
+    """Run greedy traffic through the engine and assert every request
+    reproduces the cache-free oracle exactly."""
+    assert serve_cfg.temperature <= 0, "oracle checking is greedy-only"
+    done, metrics, srv = run_server(cfg, params, serve_cfg, requests)
+    assert len(done) == len(requests)
+    want = oracle_outputs(params, cfg, requests, serve_cfg.eos_id)
+    for r in done:
+        np.testing.assert_array_equal(
+            np.asarray(r.out), want[r.uid],
+            err_msg=f"engine diverged from oracle on uid={r.uid}")
+    return done, metrics, srv

@@ -1,4 +1,8 @@
-"""Serving: batched generate, decode/prefill consistency, audio path."""
+"""Serving: batched generate, decode/prefill consistency, audio path.
+
+Engine-level tests run on the shared deterministic harness
+(tests/serving_harness.py): seeded traffic + cache-free greedy oracle.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +11,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.runtime.server import Request, ServeConfig, Server
+from serving_harness import Traffic, make_traffic, run_and_check
 
 
 def _setup(arch, dropless_moe=False):
@@ -66,18 +71,17 @@ def test_decode_matches_full_forward(arch):
 
 
 def test_server_generates_batched():
+    """Seeded mixed traffic, more requests than slots: every request
+    reproduces the cache-free oracle exactly (harness contract)."""
     cfg, params = _setup("smollm-135m")
-    srv = Server(cfg, params, ServeConfig(batch_slots=4, max_len=64))
-    reqs = [
-        Request(uid=i, prompt=np.arange(4 + i) % cfg.vocab_size, max_new=6)
-        for i in range(6)
-    ]
-    done = srv.generate(reqs)
-    assert len(done) == 6
+    reqs = make_traffic(cfg, Traffic(n_requests=6, prompt_lens=(4, 9),
+                                     max_new=(6, 6), seed=1))
+    done, metrics, _ = run_and_check(
+        cfg, params, ServeConfig(batch_slots=4, max_len=64), reqs)
     for r in done:
         assert r.out is not None and len(r.out) == 6
         assert all(0 <= int(t) < cfg.vocab_size for t in r.out)
-    assert srv.metrics["decode_tokens"] > 0
+    assert metrics["decode_tokens"] > 0
 
 
 def test_server_greedy_deterministic():
@@ -89,10 +93,12 @@ def test_server_greedy_deterministic():
 
 
 def test_server_audio_codebooks():
+    """Codebook-stream serving matches the codes-frontend oracle."""
     cfg, params = _setup("musicgen-large")
-    srv = Server(cfg, params, ServeConfig(batch_slots=2, max_len=32))
-    prompt = np.random.randint(0, cfg.vocab_size, (cfg.num_codebooks, 5))
-    done = srv.generate([Request(uid=0, prompt=prompt, max_new=4)])
+    reqs = make_traffic(cfg, Traffic(n_requests=1, prompt_lens=(5, 5),
+                                     max_new=(4, 4), seed=2))
+    done, _, _ = run_and_check(
+        cfg, params, ServeConfig(batch_slots=2, max_len=32), reqs)
     assert done[0].out.shape == (4, cfg.num_codebooks)
 
 
@@ -153,36 +159,28 @@ def test_eos_frees_slot_and_queue_backfills():
 
 def test_greedy_matches_full_forward_rollout():
     """Greedy continuous-batching output == token-by-token argmax over
-    the full-sequence forward (no cache): the engine is exact."""
+    the full-sequence forward (no cache): the engine is exact. (The
+    harness oracle IS that rollout.)"""
     cfg, params = _setup("smollm-135m")
-    prompt = [1, 2, 3, 4]
-    max_new = 5
-    toks = list(prompt)
-    for _ in range(max_new):
-        logits, _, _ = model_lib.forward(
-            params, cfg, {"tokens": jnp.asarray([toks], jnp.int32)})
-        toks.append(int(np.argmax(np.asarray(logits[0, -1], np.float32))))
-    want = toks[len(prompt):]
-    srv = Server(cfg, params, ServeConfig(batch_slots=3, max_len=64))
-    done = srv.generate(
-        [Request(uid=0, prompt=np.array(prompt), max_new=max_new)])
-    np.testing.assert_array_equal(done[0].out, want)
+    run_and_check(
+        cfg, params, ServeConfig(batch_slots=3, max_len=64),
+        [Request(uid=0, prompt=np.array([1, 2, 3, 4]), max_new=5)])
 
 
 def test_greedy_outputs_independent_of_batch_composition():
     """The same request yields identical greedy tokens whether it is
     served alone or alongside other in-flight requests -- per-slot cache
-    isolation in the shared buffer."""
+    isolation in the shared buffer (and, paged, in the shared pool)."""
     cfg, params = _setup("smollm-135m")
     solo = Server(cfg, params, ServeConfig(batch_slots=1, max_len=64))
     alone = solo.generate(
         [Request(uid=0, prompt=np.array([5, 6, 7]), max_new=6)])[0].out
-    srv = Server(cfg, params, ServeConfig(batch_slots=3, max_len=64))
-    done = srv.generate([
-        Request(uid=0, prompt=np.array([5, 6, 7]), max_new=6),
-        Request(uid=1, prompt=np.array([11, 12]), max_new=2),
-        Request(uid=2, prompt=np.array([3, 1, 4, 1, 5]), max_new=4),
-    ])
+    done, _, _ = run_and_check(
+        cfg, params, ServeConfig(batch_slots=3, max_len=64), [
+            Request(uid=0, prompt=np.array([5, 6, 7]), max_new=6),
+            Request(uid=1, prompt=np.array([11, 12]), max_new=2),
+            Request(uid=2, prompt=np.array([3, 1, 4, 1, 5]), max_new=4),
+        ])
     mixed = {r.uid: r.out for r in done}[0]
     np.testing.assert_array_equal(alone, mixed)
 
