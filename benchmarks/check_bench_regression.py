@@ -17,6 +17,12 @@ this job. Per benchmark:
     the contiguous engine (parity bit computed inside the benchmark), KV
     bytes reserved per generated token must not regress vs the baseline,
     and the bucketed prefill trace count must not grow.
+  * serve_cache_skip open-loop SLO case (gated against
+    benchmarks/baselines/slo_baseline.json): the async-admission
+    scheduler's tick-denominated latency stats on the seeded Poisson
+    trace -- p99 TTFT/ITL in virtual ticks must not regress and
+    SLO-violation counts must not grow (all deterministic: virtual
+    clock + shape-derived cost model, no wall time).
 """
 from __future__ import annotations
 
@@ -75,6 +81,21 @@ def _check_serve_case(c, b, failures):
                 f"{c['case']}: prefill trace count grew "
                 f"{b['prefill_traces']:.0f} -> {c['prefill_traces']:.0f}"
             )
+    # Open-loop SLO fields (engine/open_loop_slo): all tick-denominated
+    # and deterministic, so regressions are real scheduling changes.
+    if "slo" in c and "slo" in b:
+        for k in ("ttft_ticks_p99", "itl_ticks_p99"):
+            if c["slo"][k] > b["slo"][k] * TOL:
+                failures.append(
+                    f"{c['case']}: {k} regressed "
+                    f"{b['slo'][k]:.3f} -> {c['slo'][k]:.3f}"
+                )
+        for k in ("ttft_violations", "itl_violations"):
+            if c["slo"][k] > b["slo"][k]:
+                failures.append(
+                    f"{c['case']}: {k} grew "
+                    f"{b['slo'][k]} -> {c['slo'][k]}"
+                )
     # Engine-schedule fields (mixed10x4 and friends). decode_tokens is
     # fixed by the seeded budgets (no EOS traffic), so exact equality is
     # platform-safe; skip counts depend on float argmax tie-breaks across

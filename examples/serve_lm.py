@@ -28,6 +28,15 @@ serve_launch.main([
     "--kv-block-size", "8", "--kv-pool-blocks", "12",
 ])
 
+print("\n== open loop: live queue + SLO-aware prefill scheduling ==")
+serve_launch.main([
+    "--arch", "smollm-135m", "--reduced",
+    "--requests", "8", "--prompt-len", "8", "--max-new", "8",
+    "--batch-slots", "4", "--mixed", "--max-len", "64",
+    "--open-loop", "--arrival-rate", "20",
+    "--slo-ttft-ticks", "32", "--slo-itl-ticks", "4",
+])
+
 print("\n== audio (EnCodec codebooks, musicgen reduced) ==")
 serve_launch.main([
     "--arch", "musicgen-large", "--reduced",

@@ -244,6 +244,76 @@ def kv_row_bytes(cfg) -> int:
     return per_layer * cfg.num_layers
 
 
+# ----------------------------------------------------------- tick-time model
+@dataclasses.dataclass(frozen=True)
+class TickCosts:
+    """Deterministic engine-step cost estimates for the serving scheduler.
+
+    The unit of account is ONE DECODE TICK (a full-batch
+    ``serving_decode_step``): a prefill of ``rows`` prompt rows costs
+    ``prefill_ticks(rows)`` tick-equivalents. The scheduler's virtual
+    clock advances by these amounts, so every SLO quantity (TTFT, ITL,
+    violation counts) is a pure function of the arrival trace and the
+    model shapes -- reproducible on any host, which is what lets CI gate
+    p99 TTFT-in-ticks against a committed baseline. ``tick_seconds`` is
+    the modeled wall time of one tick unit (v5e roofline), for
+    converting SLO targets between ticks and modeled milliseconds; on
+    real hardware you would recalibrate it from measured tick times
+    without touching the tick-denominated scheduler logic.
+    """
+
+    decode_tick_s: float
+    n_params: int
+    dtype_bytes: int
+
+    @property
+    def tick_seconds(self) -> float:
+        return self.decode_tick_s
+
+    def prefill_s(self, rows: int) -> float:
+        """Modeled seconds for a batch=1 prefill over ``rows`` positions."""
+        return forward_roofline_s(
+            self.n_params, rows, dtype_bytes=self.dtype_bytes)
+
+    def prefill_ticks(self, rows: int) -> float:
+        """Prefill cost in decode-tick units (>= a small floor so a zero
+        modeled cost can never let the scheduler admit for free)."""
+        return max(self.prefill_s(rows) / self.decode_tick_s, 1e-3)
+
+
+def forward_roofline_s(
+    n_params: int, tokens: int, *, dtype_bytes: int = 2, chips: int = 1,
+) -> float:
+    """Roofline wall time of one forward pass over ``tokens`` positions.
+
+    Compute term: the standard ``2 * N * tokens`` inference FLOPs.
+    Memory term: every parameter is streamed from HBM at least once per
+    pass (the decode regime is weight-bound; at larger ``tokens`` the
+    compute term takes over, which is exactly why a prefill between two
+    decode ticks stalls the pipeline by more than one tick).
+    """
+    flops = 2.0 * float(n_params) * float(tokens)
+    bytes_moved = float(n_params) * dtype_bytes
+    return max(flops / (PEAK_FLOPS_BF16 * chips),
+               bytes_moved / (HBM_BW * chips))
+
+
+def serve_tick_costs(cfg, batch_slots: int) -> TickCosts:
+    """Build the scheduler's :class:`TickCosts` from an ArchConfig.
+
+    ``cfg`` is duck-typed: it needs ``n_params()`` (ArchConfig provides
+    an approximate count) and ``dtype``. One decode tick processes
+    ``batch_slots`` tokens (dead slots still ride through the jitted
+    step, so the cost is the STATIC batch, not the live one).
+    """
+    n = int(cfg.n_params())
+    dtype_bytes = 2 if getattr(cfg, "dtype", "bfloat16") == "bfloat16" else 4
+    decode_s = forward_roofline_s(
+        n, max(1, batch_slots), dtype_bytes=dtype_bytes)
+    return TickCosts(decode_tick_s=decode_s, n_params=n,
+                     dtype_bytes=dtype_bytes)
+
+
 def kv_reservation_bytes(
     batch_slots: int, max_rows: int, row_bytes: int, *,
     pool_blocks: int | None = None, block_size: int = 0,

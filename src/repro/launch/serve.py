@@ -2,12 +2,24 @@
 
     python -m repro.launch.serve --arch smollm-135m --requests 16 \
         [--reduced] [--max-new 32] [--mixed] [--sparce] [--eos-id N] \
-        [--kv-block-size 16] [--kv-pool-blocks N] [--prefill-buckets 8,16,32]
+        [--kv-block-size 16] [--kv-pool-blocks N] [--prefill-buckets 8,16,32] \
+        [--open-loop] [--arrival-rate 8] [--slo-ttft-ticks 64] \
+        [--slo-itl-ticks 8]
 
 --mixed draws per-request prompt lengths and decode budgets from a range
 (the continuous batcher's target workload); --sparce turns on the SparCE
 reference path for the serving MLPs and reports the realized tile-skip
 fraction.
+
+Live admission: --open-loop serves the workload through the
+``AsyncServer`` facade instead of one batch ``generate`` call -- a
+background engine thread drains the admission queue while this process
+submits requests with Poisson-spaced wall-clock gaps (--arrival-rate,
+mean requests/second). --slo-ttft-ticks / --slo-itl-ticks set the
+latency SLO (in decode-tick units, see docs/SERVING.md) the scheduler
+enforces when deciding, each engine tick, whether to admit a prefill or
+run the decode step; without them the engine admits greedily whenever a
+slot and KV blocks are free.
 
 KV paging: by default the server uses a PAGED KV cache -- a shared pool
 of --kv-block-size-row blocks with per-slot block tables, so finished
@@ -67,14 +79,30 @@ def main(argv=None):
                     help="comma-separated prompt-length buckets (padded, "
                          "masked-tail prefill); default = powers of two "
                          "up to --max-len; 'off' = exact-length prefill")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="serve via AsyncServer: a background engine "
+                         "thread drains the live queue while requests "
+                         "arrive with Poisson wall-clock gaps")
+    ap.add_argument("--arrival-rate", type=float, default=8.0,
+                    help="--open-loop mean arrival rate, requests/second")
+    ap.add_argument("--slo-ttft-ticks", type=float, default=None,
+                    help="time-to-first-token budget in decode-tick "
+                         "units; enables SLO-aware admission scheduling")
+    ap.add_argument("--slo-itl-ticks", type=float, default=None,
+                    help="inter-token latency budget in decode-tick "
+                         "units; prefills only interleave when they fit "
+                         "this gap (or TTFT forces them)")
     args = ap.parse_args(argv)
 
     import jax
 
     from repro.configs import get_config
     from repro.core.sparse_ops import SparsityConfig
+    from repro.runtime.scheduler import SLOConfig
     from repro.models import model as model_lib
-    from repro.runtime.server import Request, ServeConfig, Server
+    from repro.runtime.server import (
+        AsyncServer, Request, ServeConfig, Server,
+    )
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -98,13 +126,24 @@ def main(argv=None):
             () if args.prefill_buckets.strip().lower() == "off"
             else tuple(int(b) for b in args.prefill_buckets.split(","))
         )
-    srv = Server(cfg, params, ServeConfig(
+    slo = None
+    if args.slo_ttft_ticks is not None or args.slo_itl_ticks is not None:
+        defaults = SLOConfig()
+        slo = SLOConfig(
+            target_ttft_ticks=(args.slo_ttft_ticks
+                               if args.slo_ttft_ticks is not None
+                               else defaults.target_ttft_ticks),
+            target_itl_ticks=(args.slo_itl_ticks
+                              if args.slo_itl_ticks is not None
+                              else defaults.target_itl_ticks),
+        )
+    serve_cfg = ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len,
         temperature=args.temperature, eos_id=args.eos_id,
         seed=args.seed, sparsity=sparsity,
         kv_block_size=args.kv_block_size,
         kv_pool_blocks=args.kv_pool_blocks,
-        prefill_buckets=buckets))
+        prefill_buckets=buckets, slo=slo)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -122,10 +161,28 @@ def main(argv=None):
             prompt = rng.integers(0, cfg.vocab_size, plen)
         reqs.append(Request(uid=i, prompt=prompt, max_new=max_new))
 
-    t0 = time.perf_counter()
-    done = srv.generate(reqs)
-    dt = time.perf_counter() - t0
-    m = srv.metrics
+    if args.open_loop:
+        # Live-queue path: Poisson-spaced submissions against the
+        # background engine thread, then a graceful drain + shutdown.
+        asrv = AsyncServer(cfg, params, serve_cfg)
+        gaps = rng.exponential(1.0 / max(args.arrival_rate, 1e-6),
+                               size=len(reqs))
+        t0 = time.perf_counter()
+        for r, gap in zip(reqs, gaps):
+            time.sleep(float(gap))
+            asrv.submit(r.prompt, max_new=r.max_new, eos_id=r.eos_id,
+                        uid=r.uid)
+        done = asrv.drain()
+        asrv.shutdown()
+        dt = time.perf_counter() - t0
+        m = asrv.metrics
+        srv = asrv.server
+    else:
+        srv = Server(cfg, params, serve_cfg)
+        t0 = time.perf_counter()
+        done = srv.generate(reqs)
+        dt = time.perf_counter() - t0
+        m = srv.metrics
     tok = m["decode_tokens"]
     print(f"served {len(done)} requests, {tok} decode tokens in "
           f"{m['ticks']} ticks, {dt:.2f}s ({tok / max(dt, 1e-9):.1f} tok/s)")
@@ -154,6 +211,18 @@ def main(argv=None):
               f"({saved}, "
               f"{m['kv_reserved_bytes_per_token']/1e3:.1f} KB/token); "
               f"{int(m['prefill_traces'])} prefill traces")
+    if args.open_loop or slo is not None:
+        print(f"  queue: depth peak {int(m['queue_depth_peak'])}, "
+              f"admission {int(m['sched_admitted'])} admitted / "
+              f"{int(m['sched_deferred'])} deferred / "
+              f"{int(m['sched_forced'])} TTFT-forced; "
+              f"prefill tick share {m['prefill_tick_share']:.2f}")
+        print(f"  latency (virtual ticks): TTFT p50/p99 "
+              f"{m['ttft_ticks_p50']:.1f}/{m['ttft_ticks_p99']:.1f}, "
+              f"ITL p50/p99 "
+              f"{m['itl_ticks_p50']:.1f}/{m['itl_ticks_p99']:.1f}; "
+              f"SLO violations ttft={int(m['slo_ttft_violations'])} "
+              f"itl={int(m['slo_itl_violations'])}")
     for r in done[:3]:
         s = r.stats
         print(f"  req {r.uid}: ttft={s['ttft_s']*1e3:.1f}ms "

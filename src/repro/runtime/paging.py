@@ -13,9 +13,20 @@ only ever sees a pool of blocks plus an int32 block table passed into the
 jitted decode step. Block 0 of every pool is reserved as the NULL block:
 freed slots' table rows point at it, so their (masked, discarded) decode
 writes land somewhere harmless and can never corrupt a live neighbour.
+
+Thread-safety: :class:`BlockAllocator` serializes every operation --
+including the check-then-reserve of :meth:`try_reserve` -- on one
+internal lock, so an admission running on the engine thread can never
+race a concurrent :meth:`~repro.runtime.server.AsyncServer.submit` (or a
+second engine) into promising the same blocks twice. The commitment
+invariant ``reserved + in_use <= num_blocks`` and the free/allocated
+partition are enforced on every mutation (:meth:`check`), and releasing
+a commitment below zero -- the double-count a released slot would cause
+-- raises instead of silently corrupting admission accounting.
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from typing import Iterable, List, Optional, Sequence, Tuple
 
@@ -23,61 +34,157 @@ NULL_BLOCK = 0
 
 
 class BlockAllocator:
-    """Free-list allocator over pool block ids ``1..num_blocks`` (0 = null).
+    """Free-list allocator over pool block ids ``1..num_blocks`` (0 = null),
+    with atomic worst-case COMMITMENT accounting for admission control.
 
-    Invariants (enforced, and property-tested in tests/test_paged_kv.py):
+    Two kinds of bookkeeping live here:
+
+      * **allocation** -- blocks physically handed out (``in_use``);
+      * **reservation** -- blocks PROMISED to admitted requests but not
+        yet allocated (``reserved``). Admission reserves a request's
+        worst case up front (:meth:`try_reserve`), lazy growth draws the
+        promise down (``alloc(..., reserved=True)``), and release returns
+        the unused remainder (:meth:`unreserve`). Deadlock-freedom of
+        lazy growth depends on ``available - reserved`` never going
+        negative, which ``try_reserve`` checks and updates under ONE
+        lock -- the check-then-act is atomic even with concurrent
+        callers.
+
+    Invariants (enforced, and property-tested in tests/test_paged_kv.py
+    and tests/test_scheduler.py):
       * a block is never handed out twice without an intervening free;
       * freeing a block that is not allocated raises;
-      * ``available + in_use == num_blocks`` at all times.
+      * ``available + in_use == num_blocks`` at all times;
+      * ``0 <= reserved <= available`` at all times -- in particular,
+        un-reserving more than is outstanding (a released slot counted
+        twice) raises rather than freeing phantom capacity.
     """
 
     def __init__(self, num_blocks: int):
         if num_blocks < 1:
             raise ValueError("pool needs at least one usable block")
         self.num_blocks = num_blocks
+        self._lock = threading.RLock()
         self._free: deque[int] = deque(range(1, num_blocks + 1))
         self._allocated: set[int] = set()
+        self._reserved = 0
 
     @property
     def available(self) -> int:
-        return len(self._free)
+        with self._lock:
+            return len(self._free)
 
     @property
     def in_use(self) -> int:
-        return len(self._allocated)
+        with self._lock:
+            return len(self._allocated)
 
-    def alloc(self, n: int) -> List[int]:
-        """Pop ``n`` blocks; raises if the free list cannot cover them."""
+    @property
+    def reserved(self) -> int:
+        """Blocks promised to admitted requests but not yet allocated."""
+        with self._lock:
+            return self._reserved
+
+    def can_reserve(self, n: int) -> bool:
+        """Advisory fit check; only :meth:`try_reserve` is authoritative."""
+        with self._lock:
+            return n <= len(self._free) - self._reserved
+
+    def try_reserve(self, n: int) -> bool:
+        """Atomically promise ``n`` blocks if uncommitted capacity covers
+        them. This is THE admission gate: check and update happen under
+        the lock, so two admitters can never both see the same headroom."""
         if n < 0:
-            raise ValueError(f"cannot allocate {n} blocks")
-        if n > len(self._free):
-            raise RuntimeError(
-                f"KV pool exhausted: need {n} blocks, {len(self._free)} free"
-            )
-        out = [self._free.popleft() for _ in range(n)]
-        self._allocated.update(out)
-        return out
+            raise ValueError(f"cannot reserve {n} blocks")
+        with self._lock:
+            if n > len(self._free) - self._reserved:
+                return False
+            self._reserved += n
+            return True
+
+    def unreserve(self, n: int) -> None:
+        """Return an unused commitment (release path, or admission abort).
+
+        Raises if it would push the outstanding reservation negative --
+        the signature of a released slot's commitment being counted
+        twice, which would let admission overpromise the pool.
+        """
+        with self._lock:
+            if n < 0 or n > self._reserved:
+                raise RuntimeError(
+                    f"commitment double-count: unreserve({n}) with only "
+                    f"{self._reserved} blocks outstanding"
+                )
+            self._reserved -= n
+
+    def alloc(self, n: int, *, reserved: bool = False) -> List[int]:
+        """Pop ``n`` blocks; raises if the free list cannot cover them.
+
+        ``reserved=True`` draws the blocks out of this caller's prior
+        :meth:`try_reserve` promise (lazy growth / admission's initial
+        prompt blocks). ``reserved=False`` is an unpromised allocation
+        and may not eat into capacity promised to others.
+        """
+        with self._lock:
+            if n < 0:
+                raise ValueError(f"cannot allocate {n} blocks")
+            if reserved and n > self._reserved:
+                raise RuntimeError(
+                    f"allocating {n} committed blocks but only "
+                    f"{self._reserved} are reserved"
+                )
+            headroom = len(self._free) if reserved else (
+                len(self._free) - self._reserved)
+            if n > headroom:
+                raise RuntimeError(
+                    f"KV pool exhausted: need {n} blocks, "
+                    f"{len(self._free)} free ({self._reserved} reserved)"
+                )
+            out = [self._free.popleft() for _ in range(n)]
+            self._allocated.update(out)
+            if reserved:
+                self._reserved -= n
+            return out
 
     def free(self, blocks: Iterable[int]) -> None:
-        for b in blocks:
-            if b not in self._allocated:
-                raise RuntimeError(
-                    f"double-free / foreign free of KV block {b}"
-                )
-            self._allocated.remove(b)
-            self._free.append(b)
+        with self._lock:
+            for b in blocks:
+                if b not in self._allocated:
+                    raise RuntimeError(
+                        f"double-free / foreign free of KV block {b}"
+                    )
+                self._allocated.remove(b)
+                self._free.append(b)
 
-    def check(self) -> None:
-        """Structural invariant: free + allocated partition the pool."""
-        free = set(self._free)
-        if len(free) != len(self._free):
-            raise AssertionError("duplicate block on the free list")
-        if free & self._allocated:
-            raise AssertionError("block both free and allocated")
-        if len(free) + len(self._allocated) != self.num_blocks:
-            raise AssertionError("pool leaked or grew blocks")
-        if NULL_BLOCK in free or NULL_BLOCK in self._allocated:
-            raise AssertionError("null block entered circulation")
+    def check(self, expect_reserved: Optional[int] = None) -> None:
+        """Structural invariant: free + allocated partition the pool, and
+        reservations fit inside the free portion. ``expect_reserved``
+        lets the engine cross-check its per-slot commitment ledger (sum
+        of ``commit - len(blocks)`` over live slots) against the
+        allocator's counter -- a mismatch means a release was double
+        counted or leaked."""
+        with self._lock:
+            free = set(self._free)
+            if len(free) != len(self._free):
+                raise AssertionError("duplicate block on the free list")
+            if free & self._allocated:
+                raise AssertionError("block both free and allocated")
+            if len(free) + len(self._allocated) != self.num_blocks:
+                raise AssertionError("pool leaked or grew blocks")
+            if NULL_BLOCK in free or NULL_BLOCK in self._allocated:
+                raise AssertionError("null block entered circulation")
+            if not (0 <= self._reserved <= len(self._free)):
+                raise AssertionError(
+                    f"reservation accounting broken: {self._reserved} "
+                    f"promised, {len(self._free)} free"
+                )
+            if (expect_reserved is not None
+                    and expect_reserved != self._reserved):
+                raise AssertionError(
+                    f"commitment ledger mismatch: engine expects "
+                    f"{expect_reserved} outstanding, allocator holds "
+                    f"{self._reserved}"
+                )
 
 
 def blocks_needed(rows: int, block_size: int) -> int:

@@ -1,0 +1,140 @@
+"""SLO-aware prefill/decode scheduling for the serving engine.
+
+The engine has exactly one expensive choice to make per iteration: run
+the next DECODE tick for the requests already in flight, or spend the
+gap ADMITTING a queued request (a bucketed batch=1 prefill + cache
+scatter). Prefill stalls every in-flight request's next token by the
+prefill's cost, so admitting greedily (the PR 1-3 drain engine's policy)
+maximizes throughput but lets inter-token latency spike; never admitting
+starves the queue. This module owns that trade-off, which is the
+serving-layer analogue of the paper's core constraint: skipping /
+re-ordering work is only a win if the control path that decides to do so
+is cheap and never stalls the main pipeline -- the decision below is a
+handful of float compares on host-side state.
+
+Virtual clock
+-------------
+All decisions run on a VIRTUAL clock denominated in decode-tick units
+(:class:`repro.core.cost_model.TickCosts`): a decode tick advances it by
+1.0, a prefill of a ``rows``-bucket by ``prefill_ticks(rows)``. Wall
+time is recorded alongside for reporting, but never consulted for a
+decision, so the admission schedule -- and every SLO statistic gated in
+CI -- is a deterministic function of the seeded arrival trace.
+
+Policy (:meth:`Scheduler.admit_head`), evaluated for the queue HEAD only
+(head-of-line order keeps the schedule deterministic; see
+``runtime/queueing.py``):
+
+  1. **drain mode** (``slo is None``): always admit while a slot and the
+     KV-block commitment fit -- byte-for-byte the PR 1-3 engine policy,
+     which is what keeps ``Server.generate`` parity tests green.
+  2. **forced by TTFT**: if waiting one more tick would push the head's
+     time-to-first-token past its budget (per-request ``deadline_ticks``
+     or ``SLOConfig.target_ttft_ticks``), admit now regardless of the
+     ITL cost. This is the anti-starvation clause: decode-heavy load
+     cannot defer a queued request forever.
+  3. **idle**: nothing in flight -> admit (a decode tick over zero live
+     slots helps nobody).
+  4. **ITL headroom**: admit only if the prefill fits inside the
+     inter-token budget: 1 (the next decode tick) + cost of prefills
+     already admitted this round + this prefill <= ``target_itl_ticks``.
+     Otherwise defer and let the decode tick run.
+
+Thread-safety: a ``Scheduler`` instance is owned by the single engine
+thread; it holds no locks and must not be shared across threads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.cost_model import TickCosts
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Latency targets for live serving, in decode-tick units.
+
+    ``target_ttft_ticks`` -- budget from ARRIVAL to first token (the
+    first token comes from the prefill logits, so this bounds queue wait
+    + prefill). ``target_itl_ticks`` -- budget between consecutive
+    tokens of a running request; 1.0 is the floor (one decode tick), and
+    the gap above 1.0 is the room the scheduler may fill with prefills.
+    ``admit_headroom`` scales the TTFT budget used by the forced-admit
+    clause: < 1.0 admits early (safety margin), 1.0 admits at the last
+    tick that can still meet the budget.
+
+    Tick units are deliberate: they are deterministic on any host.
+    ``TickCosts.tick_seconds`` converts to modeled wall time (v5e
+    roofline); see docs/SERVING.md for tuning guidance.
+    """
+
+    target_ttft_ticks: float = 64.0
+    target_itl_ticks: float = 8.0
+    admit_headroom: float = 1.0
+
+
+class Scheduler:
+    """Per-tick prefill-vs-decode decisions against a :class:`SLOConfig`.
+
+    Mutable state is only the per-round admitted-prefill cost and the
+    decision counters (surfaced in ``Server.metrics``); everything else
+    comes in through the call arguments, so the same instance replayed
+    over the same trace produces the same schedule.
+    """
+
+    def __init__(self, costs: TickCosts, slo: Optional[SLOConfig] = None):
+        self.costs = costs
+        self.slo = slo
+        self._round_cost = 0.0  # prefill ticks already admitted this round
+        # Decision telemetry (lifetime of the scheduler).
+        self.admitted = 0
+        self.deferred = 0
+        self.forced = 0
+
+    # One "round" = the admission phase preceding one decode tick.
+    def begin_round(self) -> None:
+        self._round_cost = 0.0
+
+    def ttft_budget(self, deadline_ticks: Optional[float]) -> float:
+        if deadline_ticks is not None:
+            return float(deadline_ticks)
+        if self.slo is not None:
+            return self.slo.target_ttft_ticks
+        return float("inf")
+
+    def admit_head(self, *, wait_ticks: float, prefill_ticks: float,
+                   n_active: int,
+                   deadline_ticks: Optional[float] = None) -> bool:
+        """Admit the queue head now, or defer to the decode tick?
+
+        ``wait_ticks``: virtual ticks the head has already queued.
+        ``prefill_ticks``: modeled cost of its (bucketed) prefill.
+        ``n_active``: live slots that a prefill would stall.
+        """
+        if self.slo is None:  # drain mode: the PR 1-3 greedy policy
+            self.admitted += 1
+            return True
+        budget = self.ttft_budget(deadline_ticks)
+        # wait_ticks is measured against the engine's LIVE virtual clock,
+        # which already advanced past this round's earlier prefills --
+        # adding _round_cost here would double-count them and spuriously
+        # force-admit. _round_cost belongs only to the ITL clause below
+        # (the gap in-flight requests will see from this round).
+        would_finish = wait_ticks + prefill_ticks
+        if would_finish + 1.0 > budget * self.slo.admit_headroom:
+            # Deferring one tick would miss TTFT: admit now (forced).
+            self.forced += 1
+            self.admitted += 1
+            self._round_cost += prefill_ticks
+            return True
+        if n_active == 0:
+            self.admitted += 1
+            self._round_cost += prefill_ticks
+            return True
+        if 1.0 + self._round_cost + prefill_ticks <= self.slo.target_itl_ticks:
+            self.admitted += 1
+            self._round_cost += prefill_ticks
+            return True
+        self.deferred += 1
+        return False

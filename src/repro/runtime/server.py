@@ -1,28 +1,48 @@
-"""Continuous-batching serving engine with SparCE skip integration.
+"""Continuous-batching serving engine with live admission and SparCE skip
+integration.
 
-``Server`` keeps ``batch_slots`` decode slots over ONE shared, layer-
-stacked KV/SSM cache with per-slot lengths. The engine loop is:
+Engine shape (one ``step()``):
 
-  1. admission -- while a slot is free, the queue head's worst-case KV
-     need fits the block pool, and requests are pending: prefill the next
-     request alone (batch=1, prompt padded up to a small set of BUCKETS,
-     logits gathered at the last REAL position) and scatter its cache
-     into the free slot (:func:`model.insert_slot_paged` /
-     :func:`model.insert_slot_caches`); its first token is sampled from
-     the prefill logits. Bucketing bounds the number of jit traces at
+  1. **admission phase** -- while a slot is free and the queue head's
+     worst-case KV-block commitment fits the pool
+     (:meth:`BlockAllocator.try_reserve`, atomic), ask the
+     :class:`~repro.runtime.scheduler.Scheduler` whether to spend the
+     gap on a prefill or defer to the decode tick. An admitted request
+     prefills alone (batch=1, prompt padded up to a small set of
+     BUCKETS, logits gathered at the last REAL position) and its cache
+     scatters into the free slot; its first token is sampled from the
+     prefill logits. Bucketing bounds the number of jit traces at
      ``len(buckets)`` under arbitrary prompt-length traffic.
-  2. decode tick -- ONE jitted :func:`model.serving_decode_step` for all
-     slots, threading the active-slot mask through the model. Inactive
-     slots' embeddings are zeroed, so under a ReLU-family MLP their
-     activation rows are all-zero tiles and the SparCE bitmap path skips
-     their GEMM tile-dots: a freed slot costs no MXU work, which is the
+  2. **decode tick** -- ONE jitted :func:`model.serving_decode_step` for
+     all slots, threading the active-slot mask through the model.
+     Inactive slots' embeddings are zeroed, so under a ReLU-family MLP
+     their activation rows are all-zero tiles and the SparCE bitmap path
+     skips their GEMM tile-dots: a freed slot costs no MXU work -- the
      paper's dynamic zero-operand skipping applied to the serving hot
      path. ``decode_tokens`` counts only live slots.
-  3. release -- a slot is freed the moment its request hits EOS or its
-     own ``max_new`` budget, its KV blocks go back to the pool free list,
-     and the next pending request backfills it on the same engine
-     iteration. No slot ever idles through another request's tail, and no
-     HBM stays reserved for a finished request's unused ``max_len`` tail.
+  3. **release** -- a slot is freed the moment its request hits EOS or
+     its ``max_new`` budget: its KV blocks return to the pool free list,
+     its unused worst-case commitment is un-reserved (double-counting a
+     released slot raises, see ``runtime/paging.py``), and the next
+     queued request backfills it on a later admission phase.
+
+Two front doors drive that step loop:
+
+  * :meth:`Server.generate` -- the synchronous batch API of PR 1-3, now
+    a thin wrapper: it enqueues the fixed request list and drains. With
+    ``ServeConfig.slo`` unset the scheduler admits greedily, which is
+    byte-for-byte the PR 1-3 engine schedule (token outputs, tick
+    counts and SparCE skip statistics are pinned by the parity tests).
+  * :class:`AsyncServer` -- live serving: a background engine thread
+    drains a thread-safe :class:`~repro.runtime.queueing.RequestQueue`
+    that clients feed through :meth:`AsyncServer.submit`; prefills are
+    scheduled BETWEEN decode ticks under ``ServeConfig.slo``.
+
+Clocks: every scheduling decision and every CI-gated latency statistic
+runs on a deterministic VIRTUAL clock in decode-tick units (see
+``runtime/scheduler.py``); wall-clock timings are reported alongside but
+never consulted, so a seeded arrival trace reproduces its admission
+order, TTFT/ITL percentiles and SLO-violation counts on any host.
 
 KV layout: by default the caches are PAGED (``ServeConfig.kv_block_size``
 rows per block, vLLM-style) -- a shared pool of fixed-size blocks plus a
@@ -34,18 +54,29 @@ the savings the skip earns are not given back as stranded cache rows.
 ``kv_block_size=0`` restores the contiguous per-slot layout; outputs and
 skip statistics are token-identical across both (tested).
 
+Thread-safety: ``Server`` itself is single-threaded -- exactly one
+thread may call ``start_engine``/``step``/``generate``. The safe
+cross-thread surfaces are the queue (``enqueue`` via ``AsyncServer``'s
+lock), the allocator's atomic reservations, and reading ``metrics``
+values. ``AsyncServer`` serializes all engine work on its one background
+thread.
+
 Sampling is vectorized (Gumbel-max over the whole slot batch; greedy is
 pure argmax), so there is no per-row Python sampling loop. The server
 reports engine metrics (ticks, active-token counts, realized MLP
-tile-skip fraction, pool occupancy/fragmentation, prefill trace count)
-and per-request latency / throughput.
+tile-skip fraction, pool occupancy/fragmentation, prefill trace count,
+queue depth, TTFT/ITL percentiles, SLO-violation counts, prefill/decode
+tick shares) and per-request latency / throughput.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import queue as _queue_mod
+import threading
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +89,8 @@ from repro.models import model as model_lib
 from repro.runtime.paging import (
     BlockAllocator, blocks_needed, pick_bucket, resolve_buckets,
 )
+from repro.runtime.queueing import QueuedRequest, RequestQueue
+from repro.runtime.scheduler import Scheduler, SLOConfig
 
 
 @dataclasses.dataclass
@@ -67,7 +100,8 @@ class Request:
     max_new: int = 32
     eos_id: Optional[int] = None  # overrides ServeConfig.eos_id
     out: Optional[np.ndarray] = None
-    # Filled by the engine: ttft_s, latency_s, tokens, decode_ticks.
+    # Filled by the engine: ttft_s, latency_s, tokens, decode_ticks,
+    # queue_ticks, ttft_ticks, itl_ticks_max.
     stats: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
@@ -95,11 +129,18 @@ class ServeConfig:
     # masked tail positions). None = powers-of-two up to max_len; () =
     # exact-length prefill (one trace per distinct prompt length).
     prefill_buckets: Optional[Tuple[int, ...]] = None
+    # --- live admission ---------------------------------------------------
+    # Latency SLO the scheduler enforces when deciding, each engine tick,
+    # whether to admit a prefill or run the decode tick. None = drain
+    # mode: admit greedily whenever a slot + blocks are free (the PR 1-3
+    # schedule; what Server.generate parity tests pin).
+    slo: Optional[SLOConfig] = None
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Request
+    item: QueuedRequest
     produced: List[np.ndarray]
     t_admit: float
     t_first: float
@@ -107,10 +148,38 @@ class _Slot:
     cache_len: int = 0  # rows currently in this slot's cache
     blocks: List[int] = dataclasses.field(default_factory=list)
     commit: int = 0  # worst-case pool blocks promised to this request
+    admit_vt: float = 0.0  # virtual time when prefill started
+    first_vt: float = 0.0  # virtual time of the first token
+    last_token_vt: float = 0.0
+    itl_max: float = 0.0  # largest virtual-tick gap between tokens
+    released: bool = False
+
+
+@dataclasses.dataclass
+class _EngineState:
+    """Per-run device/pool state owned by the engine thread."""
+
+    caches: Any
+    alloc: Optional[BlockAllocator]
+    tables: Optional[np.ndarray]
+    slots: List[Optional[_Slot]]
+    cur_tok: np.ndarray
+    completed: List[Request]
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
 
 
 class Server:
-    """Fixed-slot continuous batcher: per-slot admission, budgets, release."""
+    """Fixed-slot continuous batcher: scheduled admission, budgets, release.
+
+    Single-threaded by contract (see module docstring); use
+    :class:`AsyncServer` for live multi-threaded traffic. The stepwise
+    surface (``start_engine`` / ``enqueue`` / ``step`` / ``any_active`` /
+    ``finalize_metrics``) is what the open-loop harness and the async
+    facade drive; ``generate`` composes them into the PR 1-3 batch API.
+    """
 
     def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig):
         if serve_cfg.sparsity is not None:
@@ -155,6 +224,26 @@ class Server:
         self._ema = sasa.SparsityEMA()
         self._rng = np.random.default_rng(serve_cfg.seed)
         self._prefill_shapes: set = set()
+        # Live-admission machinery: virtual tick clock, cost model and
+        # the SLO scheduler (drain mode when serve_cfg.slo is None).
+        self._costs = cost_model.serve_tick_costs(cfg, serve_cfg.batch_slots)
+        self._sched = Scheduler(self._costs, serve_cfg.slo)
+        self._queue = RequestQueue()
+        self._vt = 0.0
+        self._vt_prefill = 0.0
+        self._vt_decode = 0.0
+        # Latency samples and the admission log are BOUNDED (rolling
+        # windows) so a long-lived AsyncServer's RSS stays flat; the
+        # percentiles become rolling-window percentiles once the caps
+        # are hit, which no short-lived run (tests, benchmarks) reaches.
+        self._ttft_ticks_all: deque = deque(maxlen=100_000)
+        self._ttft_s_all: deque = deque(maxlen=100_000)
+        self._itl_ticks_all: deque = deque(maxlen=500_000)
+        self.admitted_uids: deque = deque(maxlen=100_000)  # admission order
+        self._st: Optional[_EngineState] = None
+        # AsyncServer hooks; called on the engine thread.
+        self.on_token: Optional[Callable[[Request, np.ndarray], None]] = None
+        self.on_finish: Optional[Callable[[Request], None]] = None
         self.metrics: Dict[str, float] = {
             "prefill_tokens": 0, "decode_tokens": 0, "ticks": 0,
             "admitted": 0, "completed": 0,
@@ -175,6 +264,19 @@ class Server:
             "kv_bytes_saved_frac": 0.0,
             "kv_reserved_bytes_per_token": 0.0,
             "prefill_traces": 0.0,
+            # Live-queue / SLO telemetry (virtual-tick units; zeros until
+            # requests complete).
+            "queue_depth": 0.0,
+            "queue_depth_peak": 0.0,
+            "ttft_ticks_p50": 0.0, "ttft_ticks_p95": 0.0,
+            "ttft_ticks_p99": 0.0,
+            "itl_ticks_p50": 0.0, "itl_ticks_p95": 0.0,
+            "itl_ticks_p99": 0.0,
+            "ttft_s_p50": 0.0, "ttft_s_p99": 0.0,
+            "slo_ttft_violations": 0.0, "slo_itl_violations": 0.0,
+            "sched_admitted": 0.0, "sched_deferred": 0.0,
+            "sched_forced": 0.0,
+            "prefill_tick_share": 0.0, "decode_tick_share": 0.0,
         }
         self._frag_sum = 0.0
         self._frag_ticks = 0
@@ -265,6 +367,12 @@ class Server:
         rows0 = int(np.asarray(r.prompt).shape[-1]) + self._patch_rows
         return rows0, rows0 + max(1, r.max_new) - 1
 
+    def _bucket_rows(self, r: Request) -> int:
+        """Padded prompt rows a request's prefill will actually run at."""
+        S = int(np.asarray(r.prompt).shape[-1])
+        S_pad = pick_bucket(S, self._buckets) if self._buckets else S
+        return S_pad + self._patch_rows
+
     def _prefill_one(self, r: Request, slot: int, caches,
                      block_ids: Optional[List[int]] = None):
         """Prefill one request alone and scatter it into ``slot``.
@@ -324,13 +432,20 @@ class Server:
 
     def _finish(self, slot_state: _Slot, t_now: float):
         r = slot_state.req
+        item = slot_state.item
         out = np.array(slot_state.produced[: r.max_new])
         r.out = out
         r.stats = {
-            "ttft_s": slot_state.t_first - slot_state.t_admit,
-            "latency_s": t_now - slot_state.t_admit,
+            # Wall-clock figures are arrival-based (queue wait included);
+            # the *_ticks figures are the deterministic virtual-clock
+            # counterparts the SLO gate uses.
+            "ttft_s": slot_state.t_first - item.arrival_s,
+            "latency_s": t_now - item.arrival_s,
             "tokens": float(len(out)),
             "decode_ticks": float(slot_state.ticks),
+            "queue_ticks": slot_state.admit_vt - item.arrival_vt,
+            "ttft_ticks": slot_state.first_vt - item.arrival_vt,
+            "itl_ticks_max": slot_state.itl_max,
         }
         self.metrics["completed"] += 1
 
@@ -366,13 +481,17 @@ class Server:
                         "raise ServeConfig.kv_pool_blocks"
                     )
 
-    def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve requests through the continuous-batching engine."""
+    # -------------------------------------------- stepwise engine surface
+    def start_engine(self) -> None:
+        """(Re)initialize the engine: fresh caches, pool, slots, queue.
+
+        ``generate`` calls this per batch; ``AsyncServer`` calls it once
+        before starting its engine thread. Metrics and latency samples
+        accumulate across runs (matching the PR 1-3 behaviour of a
+        reused ``Server``)."""
         cfg, sc = self.cfg, self.sc
-        self._validate(requests)
         B = sc.batch_slots
-        paged = self._paged
-        if paged:
+        if self._paged:
             caches = model_lib.init_paged_caches(
                 cfg, B, self._pool_usable + 1, sc.kv_block_size)
             alloc: Optional[BlockAllocator] = BlockAllocator(
@@ -381,158 +500,349 @@ class Server:
         else:
             caches = model_lib.init_caches(cfg, B, self._max_rows)
             alloc, tables = None, None
-        pending = deque(requests)
-        slots: List[Optional[_Slot]] = [None] * B
         if cfg.frontend == "codes":
             cur_tok = np.zeros((B, cfg.num_codebooks), np.int32)
         else:
             cur_tok = np.zeros((B,), np.int32)
-        done: List[Request] = []
-
-        def outstanding() -> int:
-            """Blocks promised to live requests but not yet allocated --
-            lazy growth draws on these, so admission must leave them."""
-            return sum(
-                s.commit - len(s.blocks) for s in slots if s is not None
+        if self._queue.depth():
+            raise RuntimeError(
+                "start_engine() with requests still queued: drain or "
+                "discard the previous run first"
             )
+        self._queue = RequestQueue()
+        # Fresh virtual clock per run: serve_trace's determinism contract
+        # (schedule = f(trace, config)) must hold on a REUSED Server too,
+        # or past runs would push every new arrival into the past.
+        self._vt = 0.0
+        self._st = _EngineState(
+            caches=caches, alloc=alloc, tables=tables,
+            slots=[None] * B, cur_tok=cur_tok, completed=[],
+        )
 
-        def release(i: int):
-            self._finish(slots[i], time.perf_counter())
-            done.append(slots[i].req)
-            if paged and slots[i].blocks:
-                alloc.free(slots[i].blocks)
-                tables[i, :] = 0
-            slots[i] = None
+    def enqueue(self, r: Request, *, priority: float = 0.0,
+                deadline_ticks: Optional[float] = None,
+                arrival_vt: Optional[float] = None) -> QueuedRequest:
+        """Queue a request for admission (arrival stamped at the current
+        virtual time unless given). Thread-safe; the engine thread picks
+        it up on its next admission phase."""
+        return self._queue.push(
+            r, priority=priority, deadline_ticks=deadline_ticks,
+            arrival_vt=self._vt if arrival_vt is None else arrival_vt,
+        )
 
-        while pending or any(s is not None for s in slots):
-            # 1. Admission: backfill free slots from the queue head while
-            #    the POOL (not slots x max_len) has room for the worst
-            #    case. FIFO: a too-big head blocks later requests, which
-            #    keeps admission order (and thus outputs) deterministic.
-            for i in range(B):
-                if slots[i] is not None or not pending:
-                    continue
-                r = pending[0]
-                block_ids: Optional[List[int]] = None
-                rows0, worst = self._request_need(r)
-                commit = 0
-                if paged:
-                    commit = blocks_needed(worst, sc.kv_block_size)
-                    if alloc.available - outstanding() < commit:
-                        break  # pool full: wait for a release
-                    block_ids = alloc.alloc(
-                        blocks_needed(rows0, sc.kv_block_size))
-                    tables[i, : len(block_ids)] = block_ids
-                    # Sample the peak here too: requests that finish on
-                    # their prefill token never reach a decode tick but
-                    # still occupied pool blocks.
-                    self.metrics["kv_blocks_peak_in_use"] = max(
-                        self.metrics["kv_blocks_peak_in_use"],
-                        float(alloc.in_use))
-                pending.popleft()
-                t0 = time.perf_counter()
-                last_logits, caches = self._prefill_one(
-                    r, i, caches, block_ids)
-                first = self._sample(last_logits)  # () or (K,)
-                slots[i] = _Slot(
-                    req=r, produced=[np.asarray(first)],
-                    t_admit=t0, t_first=time.perf_counter(),
-                    cache_len=rows0,
-                    blocks=block_ids or [], commit=commit,
-                )
-                cur_tok[i] = first
-                if len(slots[i].produced) >= r.max_new or self._hit_eos(
-                        r, np.asarray(first)):
-                    release(i)  # budget of 1 / instant EOS: free for reuse
+    def queue_depth(self) -> int:
+        return self._queue.depth()
 
-            active = np.array(
-                [s is not None for s in slots], np.float32
-            )
-            n_active = int(active.sum())
-            if n_active == 0:
-                if pending:
-                    continue  # slots freed during admission: re-admit
-                break
+    def any_active(self) -> bool:
+        st = self._st
+        return st is not None and any(s is not None for s in st.slots)
 
-            # 2. One fused decode tick for all slots (dead slots masked).
-            if paged:
-                # Lazy growth: a slot crossing a block edge claims its
-                # next pool block only when the write reaches it. The
-                # admission-time commitment guarantees the free list can
-                # cover every live slot's growth.
-                for i, s in enumerate(slots):
-                    if s is None:
-                        continue
-                    blk_idx = s.cache_len // sc.kv_block_size
-                    if blk_idx >= len(s.blocks):
-                        (new_blk,) = alloc.alloc(1)
-                        s.blocks.append(new_blk)
-                        tables[i, blk_idx] = new_blk
+    @property
+    def vt(self) -> float:
+        """The engine's virtual clock, in decode-tick units."""
+        return self._vt
+
+    def advance_vt(self, to_vt: float) -> None:
+        """Advance the virtual clock across an IDLE gap (open-loop
+        drivers use this to jump to the next arrival; never rewinds)."""
+        self._vt = max(self._vt, float(to_vt))
+
+    def _outstanding_commit(self) -> int:
+        """Engine-side commitment ledger: blocks promised to live slots
+        but not yet allocated. Cross-checked against the allocator's
+        atomic counter every tick (mismatch == double-count bug)."""
+        st = self._st
+        return sum(
+            s.commit - len(s.blocks)
+            for s in st.slots if s is not None
+        )
+
+    def _record_first_token(self, s: _Slot) -> None:
+        item = s.item
+        ttft = s.first_vt - item.arrival_vt
+        self._ttft_ticks_all.append(ttft)
+        self._ttft_s_all.append(s.t_first - item.arrival_s)
+        if ttft > self._sched.ttft_budget(item.deadline_ticks):
+            self.metrics["slo_ttft_violations"] += 1
+
+    def _emit_token(self, r: Request, tok: np.ndarray) -> None:
+        if self.on_token is not None:
+            self.on_token(r, tok)
+
+    def _release(self, i: int) -> None:
+        st = self._st
+        s = st.slots[i]
+        if s is None or s.released:
+            raise RuntimeError(f"slot {i} released twice")
+        s.released = True
+        self._finish(s, time.perf_counter())
+        if self.on_finish is None:
+            # Sync drivers (generate/serve_trace) read completions from
+            # engine state; with an on_finish consumer (AsyncServer)
+            # nothing accumulates here, so a long-lived engine's memory
+            # stays flat.
+            st.completed.append(s.req)
+        if self._paged:
+            if s.blocks:
+                st.alloc.free(s.blocks)
+            # Return the UNUSED tail of the worst-case commitment; the
+            # allocator raises if this would double-count (released slot
+            # already un-reserved).
+            st.alloc.unreserve(s.commit - len(s.blocks))
+            s.commit = len(s.blocks)
+            st.tables[i, :] = 0
+        st.slots[i] = None
+        if self._paged:
+            # Full structural + ledger check at the point pool
+            # membership changes (per release, not per tick).
+            st.alloc.check(expect_reserved=self._outstanding_commit())
+        if self.on_finish is not None:
+            self.on_finish(s.req)
+
+    def _admission_phase(self) -> int:
+        """Admit queue-head requests into free slots, scheduler-gated.
+
+        Each free slot is considered once (matching the PR 1-3 loop); a
+        head that does not fit the pool, or that the scheduler defers,
+        blocks everything behind it -- deterministic head-of-line order.
+        Returns the number of requests admitted."""
+        st, sc = self._st, self.sc
+        B = sc.batch_slots
+        self._sched.begin_round()
+        admitted = 0
+        for i in range(B):
+            if st.slots[i] is not None:
+                continue
+            item = self._queue.peek()
+            if item is None:
+                continue
+            r = item.req
+            rows0, worst = self._request_need(r)
+            commit = 0
+            if self._paged:
+                commit = blocks_needed(worst, sc.kv_block_size)
+                if not st.alloc.can_reserve(commit):
+                    break  # pool full: wait for a release
+            n_active = sum(1 for s in st.slots if s is not None)
+            pt = self._costs.prefill_ticks(self._bucket_rows(r))
+            if not self._sched.admit_head(
+                    wait_ticks=self._vt - item.arrival_vt,
+                    prefill_ticks=pt, n_active=n_active,
+                    deadline_ticks=item.deadline_ticks):
+                break  # SLO defer: spend the gap on the decode tick
+            block_ids: Optional[List[int]] = None
+            if self._paged:
+                # try_reserve is the ATOMIC form of the can_reserve probe
+                # above; with a single engine thread they always agree,
+                # and with concurrent reservers only this one counts.
+                if not st.alloc.try_reserve(commit):
+                    break
+                block_ids = st.alloc.alloc(
+                    blocks_needed(rows0, sc.kv_block_size), reserved=True)
+                st.tables[i, : len(block_ids)] = block_ids
+                # Sample the peak here too: requests that finish on
+                # their prefill token never reach a decode tick but
+                # still occupied pool blocks.
                 self.metrics["kv_blocks_peak_in_use"] = max(
                     self.metrics["kv_blocks_peak_in_use"],
-                    float(alloc.in_use))
-                used_rows = sum(
-                    s.cache_len + 1 for s in slots if s is not None)
-                cap_rows = alloc.in_use * sc.kv_block_size
-                if cap_rows:
-                    self._frag_sum += 1.0 - used_rows / cap_rows
-                    self._frag_ticks += 1
-            step = np.where(
-                active.astype(bool)[:, None] if cur_tok.ndim > 1
-                else active.astype(bool),
-                cur_tok, 0,
-            ).astype(np.int32)
-            if cfg.frontend == "codes":
-                step_toks = jnp.asarray(step)[..., None]  # (B, K, 1)
-            else:
-                step_toks = jnp.asarray(step)[:, None]  # (B, 1)
+                    float(st.alloc.in_use))
+            # By identity: a concurrent submit may have pushed a new,
+            # higher-priority head between our peek and now.
+            self._queue.pop_expected(item)
             t0 = time.perf_counter()
-            if paged:
-                logits, caches, skip = self._decode(
-                    self.params, step_toks, caches, jnp.asarray(active),
-                    jnp.asarray(tables),
-                )
-            else:
-                logits, caches, skip = self._decode(
-                    self.params, step_toks, caches, jnp.asarray(active)
-                )
-            self.metrics["decode_s"] += time.perf_counter() - t0
-            self.metrics["ticks"] += 1
-            self.metrics["decode_tokens"] += n_active
-            skip = np.asarray(skip, np.float64)
-            self.metrics["skipped_tile_dots"] += float(skip[0])
-            self.metrics["total_tile_dots"] += float(skip[1])
-            self._ema.update(float(skip[0]), float(skip[1]))
-            self._maybe_replan()
-
-            last = np.asarray(
-                logits[:, -1] if cfg.frontend != "codes" else logits[:, 0],
-                np.float32,
+            admit_vt = self._vt
+            last_logits, st.caches = self._prefill_one(
+                r, i, st.caches, block_ids)
+            self._vt += pt
+            self._vt_prefill += pt
+            first = self._sample(last_logits)  # () or (K,)
+            s = _Slot(
+                req=r, item=item, produced=[np.asarray(first)],
+                t_admit=t0, t_first=time.perf_counter(),
+                cache_len=rows0,
+                blocks=block_ids if block_ids is not None else [],
+                commit=commit,
+                admit_vt=admit_vt, first_vt=self._vt,
+                last_token_vt=self._vt,
             )
-            nxt = self._sample(last)  # (B,) or (B, K)
+            st.slots[i] = s
+            st.cur_tok[i] = first
+            self.admitted_uids.append(r.uid)
+            self._record_first_token(s)
+            self._emit_token(r, np.asarray(first))
+            admitted += 1
+            if len(s.produced) >= r.max_new or self._hit_eos(
+                    r, np.asarray(first)):
+                self._release(i)  # budget of 1 / instant EOS: reuse slot
+        return admitted
 
-            # 3. Per-slot bookkeeping + immediate release on EOS/budget.
-            for i in range(B):
-                s = slots[i]
+    def _decode_tick(self) -> int:
+        """One fused decode tick for all slots (dead slots masked).
+        Returns the number of live slots it decoded for (0 = no-op)."""
+        st, cfg, sc = self._st, self.cfg, self.sc
+        B = sc.batch_slots
+        active = np.array(
+            [s is not None for s in st.slots], np.float32
+        )
+        n_active = int(active.sum())
+        if n_active == 0:
+            return 0
+        slo = self.sc.slo
+        if self._paged:
+            # Lazy growth: a slot crossing a block edge claims its
+            # next pool block only when the write reaches it. The
+            # admission-time commitment guarantees the free list can
+            # cover every live slot's growth.
+            for i, s in enumerate(st.slots):
                 if s is None:
                     continue
-                tok = np.asarray(nxt[i])
-                s.produced.append(tok)
-                s.ticks += 1
-                s.cache_len += 1  # this tick wrote cur_tok at cache_len
-                cur_tok[i] = tok
-                if len(s.produced) >= s.req.max_new or self._hit_eos(
-                        s.req, tok):
-                    release(i)
-
-        if self.metrics["total_tile_dots"] > 0:
-            self.metrics["mlp_skip_fraction"] = (
-                self.metrics["skipped_tile_dots"]
-                / self.metrics["total_tile_dots"]
+                blk_idx = s.cache_len // sc.kv_block_size
+                if blk_idx >= len(s.blocks):
+                    (new_blk,) = st.alloc.alloc(1, reserved=True)
+                    s.blocks.append(new_blk)
+                    st.tables[i, blk_idx] = new_blk
+            self.metrics["kv_blocks_peak_in_use"] = max(
+                self.metrics["kv_blocks_peak_in_use"],
+                float(st.alloc.in_use))
+            # Commitment invariant, cheap per-tick form (two ints): the
+            # allocator's atomic reservation counter must equal the
+            # engine's per-slot ledger. The full structural check runs
+            # on every release, where pool membership actually changes.
+            if st.alloc.reserved != self._outstanding_commit():
+                raise AssertionError(
+                    f"commitment ledger mismatch: engine expects "
+                    f"{self._outstanding_commit()} outstanding, "
+                    f"allocator holds {st.alloc.reserved}"
+                )
+            used_rows = sum(
+                s.cache_len + 1 for s in st.slots if s is not None)
+            cap_rows = st.alloc.in_use * sc.kv_block_size
+            if cap_rows:
+                self._frag_sum += 1.0 - used_rows / cap_rows
+                self._frag_ticks += 1
+        cur_tok = st.cur_tok
+        step = np.where(
+            active.astype(bool)[:, None] if cur_tok.ndim > 1
+            else active.astype(bool),
+            cur_tok, 0,
+        ).astype(np.int32)
+        if cfg.frontend == "codes":
+            step_toks = jnp.asarray(step)[..., None]  # (B, K, 1)
+        else:
+            step_toks = jnp.asarray(step)[:, None]  # (B, 1)
+        t0 = time.perf_counter()
+        if self._paged:
+            logits, st.caches, skip = self._decode(
+                self.params, step_toks, st.caches, jnp.asarray(active),
+                jnp.asarray(st.tables),
             )
-        self._account_modeled_bytes()
-        self._account_kv_bytes()
-        return done
+        else:
+            logits, st.caches, skip = self._decode(
+                self.params, step_toks, st.caches, jnp.asarray(active)
+            )
+        self.metrics["decode_s"] += time.perf_counter() - t0
+        self.metrics["ticks"] += 1
+        self.metrics["decode_tokens"] += n_active
+        self._vt += 1.0
+        self._vt_decode += 1.0
+        skip = np.asarray(skip, np.float64)
+        self.metrics["skipped_tile_dots"] += float(skip[0])
+        self.metrics["total_tile_dots"] += float(skip[1])
+        self._ema.update(float(skip[0]), float(skip[1]))
+        self._maybe_replan()
+
+        last = np.asarray(
+            logits[:, -1] if cfg.frontend != "codes" else logits[:, 0],
+            np.float32,
+        )
+        nxt = self._sample(last)  # (B,) or (B, K)
+
+        # Per-slot bookkeeping + immediate release on EOS/budget.
+        for i in range(B):
+            s = st.slots[i]
+            if s is None:
+                continue
+            tok = np.asarray(nxt[i])
+            s.produced.append(tok)
+            s.ticks += 1
+            s.cache_len += 1  # this tick wrote cur_tok at cache_len
+            gap = self._vt - s.last_token_vt
+            s.last_token_vt = self._vt
+            s.itl_max = max(s.itl_max, gap)
+            self._itl_ticks_all.append(gap)
+            if slo is not None and gap > slo.target_itl_ticks:
+                self.metrics["slo_itl_violations"] += 1
+            cur_tok[i] = tok
+            self._emit_token(s.req, tok)
+            if len(s.produced) >= s.req.max_new or self._hit_eos(
+                    s.req, tok):
+                self._release(i)
+        return n_active
+
+    def step(self) -> Dict[str, int]:
+        """One engine iteration: an admission phase, then (if anything
+        is live) one decode tick. The caller loops this while
+        ``queue_depth() or any_active()``."""
+        if self._st is None:
+            raise RuntimeError("start_engine() before step()")
+        admitted = self._admission_phase()
+        decoded = self._decode_tick()
+        return {"admitted": admitted, "decoded": decoded}
+
+    def serve_trace(self, trace, *, priorities=None,
+                    deadlines=None) -> List[Request]:
+        """Serve an open-loop arrival trace deterministically.
+
+        ``trace`` is ``[(arrival_vt, Request)]``: each request is
+        enqueued exactly when the virtual clock reaches its arrival
+        (idle gaps fast-forward the clock), so the whole run --
+        admission order (``admitted_uids``), TTFT/ITL percentiles, SLO
+        violations -- is a pure function of the trace and the config.
+        This is THE open-loop driver: the scheduler tests and the
+        CI-gated SLO benchmark both call it, so they measure the same
+        schedule by construction. ``priorities``/``deadlines`` map
+        ``uid -> priority / deadline_ticks``. Single-threaded, like the
+        rest of the stepwise surface; use :class:`AsyncServer` for real
+        wall-clock arrivals."""
+        self._validate([r for _, r in trace])
+        self.start_engine()
+        items = sorted(enumerate(trace), key=lambda e: (e[1][0], e[0]))
+        i = 0
+        while True:
+            while i < len(items) and items[i][1][0] <= self._vt + 1e-9:
+                _, (avt, r) = items[i]
+                self.enqueue(
+                    r, arrival_vt=float(avt),
+                    priority=(priorities or {}).get(r.uid, 0.0),
+                    deadline_ticks=(deadlines or {}).get(r.uid),
+                )
+                i += 1
+            if self.queue_depth() == 0 and not self.any_active():
+                if i >= len(items):
+                    break
+                self.advance_vt(items[i][1][0])  # idle to next arrival
+                continue
+            self.step()
+        self.finalize_metrics()
+        return list(self._st.completed)
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve a fixed request list through the engine and drain it.
+
+        A thin wrapper over the stepwise surface: with no SLO configured
+        the scheduler admits greedily and this is schedule-identical to
+        the PR 1-3 engine (tokens, ticks, skip stats -- all pinned by
+        the parity tests). With ``ServeConfig.slo`` set the admission
+        schedule interleaves under the SLO instead.
+        """
+        self._validate(requests)
+        self.start_engine()
+        for r in requests:
+            self.enqueue(r)
+        while self.queue_depth() or self.any_active():
+            self.step()
+        self.finalize_metrics()
+        return list(self._st.completed)
 
     def prefill_trace_count(self) -> int:
         """Compiled prefill traces across all sparsity buckets -- the
@@ -544,6 +854,34 @@ class Server:
             if cache_size is not None:
                 n += int(cache_size())
         return max(n, len(self._prefill_shapes))
+
+    def finalize_metrics(self) -> Dict[str, float]:
+        """Fold the run's accumulators into ``metrics`` (skip fraction,
+        KV-bytes model, queue depth, latency percentiles, SLO counts,
+        tick shares). Engine thread only; returns ``metrics``."""
+        if self.metrics["total_tile_dots"] > 0:
+            self.metrics["mlp_skip_fraction"] = (
+                self.metrics["skipped_tile_dots"]
+                / self.metrics["total_tile_dots"]
+            )
+        self._account_modeled_bytes()
+        self._account_kv_bytes()
+        m = self.metrics
+        m["queue_depth"] = float(self._queue.depth())
+        m["queue_depth_peak"] = float(self._queue.depth_peak)
+        for q in (50, 95, 99):
+            m[f"ttft_ticks_p{q}"] = _pct(self._ttft_ticks_all, q)
+            m[f"itl_ticks_p{q}"] = _pct(self._itl_ticks_all, q)
+        m["ttft_s_p50"] = _pct(self._ttft_s_all, 50)
+        m["ttft_s_p99"] = _pct(self._ttft_s_all, 99)
+        m["sched_admitted"] = float(self._sched.admitted)
+        m["sched_deferred"] = float(self._sched.deferred)
+        m["sched_forced"] = float(self._sched.forced)
+        vt_total = self._vt_prefill + self._vt_decode
+        if vt_total > 0:
+            m["prefill_tick_share"] = self._vt_prefill / vt_total
+            m["decode_tick_share"] = self._vt_decode / vt_total
+        return m
 
     def _account_kv_bytes(self) -> None:
         """KV reservation telemetry: what the pool actually holds vs what
@@ -591,3 +929,255 @@ class Server:
             (by["two_kernel"] - by["fused"])
             * cfg.num_layers * self.metrics["ticks"]
         )
+
+
+# ------------------------------------------------------------ async facade
+_STREAM_END = object()
+
+
+class Submission:
+    """Handle for one :meth:`AsyncServer.submit`: stream tokens as they
+    are produced, or block for the finished :class:`Request`.
+
+    Thread-safe: the engine thread feeds ``_tokens``/``_done``; any
+    client thread may consume :meth:`stream` / :meth:`result` (but only
+    ONE consumer per handle -- tokens are handed out once)."""
+
+    def __init__(self, request: Request):
+        self.request = request
+        self._tokens: _queue_mod.Queue = _queue_mod.Queue()
+        self._done = threading.Event()
+        self._error: Optional[BaseException] = None
+
+    @property
+    def uid(self) -> int:
+        return self.request.uid
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def stream(self, timeout: Optional[float] = None) -> Iterator[np.ndarray]:
+        """Yield tokens as the engine produces them; returns at EOS /
+        budget. ``timeout`` bounds the wait for EACH token (raises
+        ``TimeoutError``, like :meth:`result`)."""
+        while True:
+            try:
+                tok = self._tokens.get(timeout=timeout)
+            except _queue_mod.Empty:
+                raise TimeoutError(
+                    f"request uid={self.request.uid}: no token within "
+                    f"{timeout}s") from None
+            if tok is _STREAM_END:
+                if self._error is not None:
+                    raise self._error
+                return
+            yield tok
+
+    def result(self, timeout: Optional[float] = None) -> Request:
+        """Block until the request finishes; returns it with ``out`` and
+        ``stats`` filled."""
+        if not self._done.wait(timeout=timeout):
+            raise TimeoutError(
+                f"request uid={self.request.uid} not finished in time")
+        if self._error is not None:
+            raise self._error
+        return self.request
+
+
+class AsyncServer:
+    """Live-queue serving facade: a background engine thread drains a
+    thread-safe admission queue while clients ``submit()`` concurrently.
+
+    * :meth:`submit` validates, enqueues and returns a
+      :class:`Submission` handle (callable from any thread).
+    * :meth:`stream` / ``Submission.stream`` yield tokens as decode
+      ticks produce them.
+    * :meth:`drain` blocks until everything submitted so far has
+      finished and returns the completed requests (since the last
+      drain), with ``metrics`` finalized.
+    * :meth:`shutdown` (or ``with AsyncServer(...) as srv:``) drains and
+      stops the engine thread gracefully.
+
+    All model/cache state is owned by the one engine thread; the only
+    shared surfaces are the queue, the handle table (under ``_lock``)
+    and the allocator's atomic reservations. An engine-thread exception
+    fails all outstanding handles and stops the engine; it re-raises
+    from ``drain``/``result``.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig,
+                 *, start: bool = True):
+        self._srv = Server(cfg, params, serve_cfg)
+        self._srv.start_engine()
+        self._srv.on_token = self._on_token
+        self._srv.on_finish = self._on_finish
+        self._lock = threading.RLock()
+        self._wake = threading.Condition(self._lock)
+        self._handles: Dict[int, Submission] = {}
+        self._completed: List[Request] = []
+        self._stop = False
+        self._started = False
+        self._engine_error: Optional[BaseException] = None
+        self._auto_uid = itertools.count()
+        self._thread = threading.Thread(
+            target=self._engine_loop, name="serve-engine", daemon=True)
+        if start:
+            self.start()
+
+    # Engine lifecycle -----------------------------------------------------
+    def start(self) -> None:
+        with self._lock:
+            if self._started:
+                return
+            self._started = True
+        self._thread.start()
+
+    def _work_pending(self) -> bool:
+        return self._srv.queue_depth() > 0 or self._srv.any_active()
+
+    def _engine_loop(self) -> None:
+        while True:
+            with self._wake:
+                while not self._stop and not self._work_pending():
+                    self._wake.wait(timeout=0.05)
+                if self._stop:
+                    # Prompt exit: shutdown(drain=True) already drained,
+                    # and shutdown(drain=False) means abort -- it fails
+                    # any outstanding handles after joining us.
+                    break
+            try:
+                self._srv.step()
+            except BaseException as e:  # noqa: BLE001 - fail all waiters
+                with self._wake:
+                    self._engine_error = e
+                    self._stop = True
+                    for h in self._handles.values():
+                        h._error = e
+                        h._done.set()
+                        h._tokens.put(_STREAM_END)
+                    self._handles.clear()
+                    self._wake.notify_all()
+                return
+            with self._wake:
+                self._wake.notify_all()
+
+    # Engine-thread callbacks ---------------------------------------------
+    def _on_token(self, req: Request, tok: np.ndarray) -> None:
+        with self._lock:
+            h = self._handles.get(req.uid)
+        if h is not None:
+            h._tokens.put(np.asarray(tok))
+
+    def _on_finish(self, req: Request) -> None:
+        with self._lock:
+            h = self._handles.pop(req.uid, None)
+            self._completed.append(req)
+        if h is not None:
+            h._done.set()
+            h._tokens.put(_STREAM_END)
+
+    # Client surface -------------------------------------------------------
+    def submit(self, prompt, max_new: int = 32, *,
+               eos_id: Optional[int] = None, priority: float = 0.0,
+               deadline_ticks: Optional[float] = None,
+               uid: Optional[int] = None) -> Submission:
+        """Enqueue one request; returns its :class:`Submission` handle.
+
+        Raises ``ValueError`` immediately (nothing enqueued) if the
+        request could never be served (overlong, or worst-case KV blocks
+        exceed the pool). ``priority`` orders admission (higher first,
+        FIFO within a class); ``deadline_ticks`` is a per-request TTFT
+        budget overriding the config SLO."""
+        r = Request(
+            uid=next(self._auto_uid) if uid is None else uid,
+            prompt=np.asarray(prompt), max_new=max_new, eos_id=eos_id,
+        )
+        self._srv._validate([r])
+        h = Submission(r)
+        with self._wake:
+            if self._stop or self._engine_error is not None:
+                raise RuntimeError("AsyncServer is shut down")
+            if r.uid in self._handles:
+                # Overwriting would orphan the first handle's waiter and
+                # complete the second with the wrong Request.
+                raise ValueError(
+                    f"request uid={r.uid} is already in flight")
+            self._handles[r.uid] = h
+            self._srv.enqueue(
+                r, priority=priority, deadline_ticks=deadline_ticks)
+            self._wake.notify_all()
+        return h
+
+    def stream(self, handle: Submission,
+               timeout: Optional[float] = None) -> Iterator[np.ndarray]:
+        return handle.stream(timeout=timeout)
+
+    def drain(self, timeout: Optional[float] = None) -> List[Request]:
+        """Block until all submitted requests finish; returns the ones
+        completed since the last drain. Assumes no concurrent submits
+        while draining (the metrics finalization runs on the caller)."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._wake:
+            while self._handles or self._work_pending():
+                if self._engine_error is not None:
+                    raise self._engine_error
+                left = None if deadline is None else (
+                    deadline - time.perf_counter())
+                if left is not None and left <= 0:
+                    raise TimeoutError("drain() timed out")
+                self._wake.wait(timeout=0.05 if left is None
+                                else min(0.05, left))
+            if self._engine_error is not None:
+                raise self._engine_error
+            out, self._completed = self._completed, []
+        self._srv.finalize_metrics()
+        return out
+
+    def shutdown(self, *, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Graceful stop: optionally drain outstanding work, then stop
+        and join the engine thread. With ``drain=False`` the engine
+        aborts after its current step and any unfinished submissions
+        fail with ``RuntimeError``. Idempotent."""
+        if drain and self._started and self._engine_error is None:
+            try:
+                self.drain(timeout=timeout)
+            except TimeoutError:
+                pass  # fall through: stop anyway
+        with self._wake:
+            self._stop = True
+            # Latch the queue too: a submit racing this teardown fails
+            # in RequestQueue.push instead of feeding a dead engine.
+            self._srv._queue.close()
+            self._wake.notify_all()
+        if self._started:
+            self._thread.join(timeout=timeout)
+        with self._wake:
+            if self._handles:
+                err = RuntimeError(
+                    "AsyncServer shut down before completion")
+                for h in self._handles.values():
+                    h._error = err
+                    h._done.set()
+                    h._tokens.put(_STREAM_END)
+                self._handles.clear()
+
+    close = shutdown
+
+    def __enter__(self) -> "AsyncServer":
+        self.start()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown(drain=exc_type is None)
+
+    @property
+    def metrics(self) -> Dict[str, float]:
+        return self._srv.metrics
+
+    @property
+    def server(self) -> Server:
+        """The wrapped engine (read-only use: metrics, config). Do not
+        call its stepwise methods while the engine thread runs."""
+        return self._srv

@@ -1,6 +1,6 @@
 """Deterministic serving test harness shared by all serving tests.
 
-Three pieces:
+Four pieces:
 
   * :func:`make_traffic` -- a SEEDED traffic generator: prompt lengths,
     decode budgets, contents and (optional) EOS ids all come from one
@@ -14,6 +14,13 @@ Three pieces:
   * :func:`run_and_check` -- run a :class:`Server` over traffic and
     assert outputs match the oracle, returning (done, metrics) for
     engine-level assertions.
+  * :func:`make_open_loop_trace` / :func:`run_open_loop` -- a seeded
+    OPEN-LOOP workload (Poisson arrivals on the engine's virtual tick
+    clock) plus a single-threaded driver over the stepwise engine
+    surface. Arrivals, contents and the scheduler's virtual clock are
+    all deterministic, so the admission order, TTFT/ITL percentiles and
+    SLO-violation counts reproduce exactly -- this is what the
+    scheduler tests and CI's SLO gate replay.
 """
 from __future__ import annotations
 
@@ -104,6 +111,41 @@ def oracle_outputs(params, cfg, requests: List[Request],
             r.eos_id if r.eos_id is not None else default_eos)
         for r in requests
     }
+
+
+@dataclasses.dataclass(frozen=True)
+class OpenLoopTraffic(Traffic):
+    """Seeded open-loop workload: Poisson arrivals in virtual-tick units.
+
+    ``rate_per_tick`` is the mean number of arrivals per decode tick;
+    inter-arrival gaps are exponential draws from a SEPARATE rng stream
+    (seed + 1), so the request CONTENTS are identical to the closed-loop
+    ``Traffic`` with the same seed -- which is what makes
+    queue-drain-vs-batch-generate token-parity checks trivial."""
+
+    rate_per_tick: float = 0.25
+
+
+def make_open_loop_trace(cfg, t: OpenLoopTraffic):
+    """[(arrival_vt, Request)] sorted by arrival; contents == make_traffic."""
+    reqs = make_traffic(cfg, Traffic(
+        n_requests=t.n_requests, prompt_lens=t.prompt_lens,
+        max_new=t.max_new, seed=t.seed, eos_prob=t.eos_prob))
+    rng = np.random.default_rng(t.seed + 1)
+    gaps = rng.exponential(1.0 / max(t.rate_per_tick, 1e-9),
+                           size=len(reqs))
+    arrivals = np.cumsum(gaps)
+    return [(float(a), r) for a, r in zip(arrivals, reqs)]
+
+
+def run_open_loop(srv: Server, trace, *, priorities=None,
+                  deadlines=None) -> List[Request]:
+    """Drive the engine over an arrival trace -- a thin alias for
+    :meth:`Server.serve_trace`, the one shared deterministic open-loop
+    driver (the CI-gated SLO benchmark calls the same method, so tests
+    and the gate measure the same schedule by construction)."""
+    return srv.serve_trace(trace, priorities=priorities,
+                           deadlines=deadlines)
 
 
 def run_server(cfg, params, serve_cfg: ServeConfig,

@@ -1,0 +1,368 @@
+"""Async admission: queue, scheduler, SLO accounting, allocator atomicity.
+
+Everything engine-level runs on the deterministic open-loop harness
+(tests/serving_harness.py): seeded Poisson arrivals on the virtual tick
+clock, so admission order and every SLO statistic is reproducible -- the
+property the CI gate (benchmarks/baselines/slo_baseline.json) relies on.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.runtime.paging import BlockAllocator
+from repro.runtime.queueing import RequestQueue
+from repro.runtime.scheduler import Scheduler, SLOConfig
+from repro.runtime.server import AsyncServer, Request, ServeConfig, Server
+from serving_harness import (
+    OpenLoopTraffic, Traffic, make_open_loop_trace, make_traffic,
+    oracle_outputs, run_open_loop,
+)
+
+
+def _setup(arch="smollm-135m"):
+    cfg = get_config(arch).reduced()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ------------------------------------------------------------- host pieces
+def test_request_queue_priority_then_fifo():
+    q = RequestQueue()
+    a = q.push("a")
+    b = q.push("b", priority=1.0)
+    c = q.push("c")
+    d = q.push("d", priority=1.0)
+    assert [q.pop().req for _ in range(4)] == ["b", "d", "a", "c"]
+    assert q.depth() == 0 and q.depth_peak == 4
+    assert (a.seq, b.seq, c.seq, d.seq) == (0, 1, 2, 3)
+    q.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        q.push("e")
+
+
+def test_pop_expected_survives_concurrent_higher_priority_push():
+    """Regression: the engine peeks the head, a client concurrently
+    pushes a higher-priority entry (new head), and the engine must then
+    remove the entry it actually admitted -- a bare pop() here would
+    discard the newcomer and double-admit the old head."""
+    q = RequestQueue()
+    a = q.push("a")
+    head = q.peek()
+    b = q.push("b", priority=5.0)  # races in between peek and pop
+    assert q.pop_expected(head) is a
+    assert q.peek() is b  # the newcomer is intact, not discarded
+    assert q.pop_expected(b) is b
+    with pytest.raises(RuntimeError, match="no longer queued"):
+        q.pop_expected(a)
+
+
+def test_scheduler_drain_mode_always_admits():
+    """slo=None is the PR 1-3 greedy policy the generate() parity tests
+    pin: every fitting head admits, nothing defers."""
+    from repro.core.cost_model import TickCosts
+    sched = Scheduler(TickCosts(decode_tick_s=1e-3, n_params=1,
+                                dtype_bytes=2), slo=None)
+    sched.begin_round()
+    for _ in range(5):
+        assert sched.admit_head(wait_ticks=0.0, prefill_ticks=10.0,
+                                n_active=4)
+    assert sched.admitted == 5 and sched.deferred == 0
+
+
+def test_scheduler_defers_then_forces_on_ttft():
+    """Tight ITL defers; growing queue wait eventually forces admission
+    inside the TTFT budget (the anti-starvation clause)."""
+    from repro.core.cost_model import TickCosts
+    slo = SLOConfig(target_ttft_ticks=10.0, target_itl_ticks=1.0)
+    sched = Scheduler(TickCosts(decode_tick_s=1e-3, n_params=1,
+                                dtype_bytes=2), slo=slo)
+    waits = []
+    for wait in range(20):
+        sched.begin_round()
+        if sched.admit_head(wait_ticks=float(wait), prefill_ticks=2.0,
+                            n_active=3):
+            waits.append(wait)
+    # Deferred while wait + prefill + 1 <= 10, forced right after.
+    assert waits and waits[0] == 8
+    assert sched.deferred == 8 and sched.forced == len(waits)
+    # A per-request deadline overrides the config budget.
+    sched.begin_round()
+    assert sched.admit_head(wait_ticks=0.0, prefill_ticks=2.0,
+                            n_active=3, deadline_ticks=2.0)
+
+
+# --------------------------------------------------- allocator atomicity
+def test_block_allocator_reservation_invariants():
+    a = BlockAllocator(8)
+    assert a.try_reserve(5)
+    assert a.reserved == 5
+    # Unpromised allocation may not eat into the commitment.
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.alloc(4)
+    got = a.alloc(3, reserved=True)
+    assert a.reserved == 2 and a.in_use == 3
+    # Cannot draw more committed blocks than were promised.
+    with pytest.raises(RuntimeError, match="reserved"):
+        a.alloc(3, reserved=True)
+    # try_reserve respects existing commitments atomically.
+    assert not a.try_reserve(4)
+    assert a.try_reserve(3)
+    a.check()
+    a.free(got)
+    a.unreserve(5)
+    a.check(expect_reserved=0)
+    assert a.available == 8 and a.reserved == 0
+
+
+def test_released_commitment_never_double_counts():
+    """Un-reserving more than is outstanding -- the accounting signature
+    of a released slot counted twice -- raises instead of inflating the
+    pool's apparent capacity."""
+    a = BlockAllocator(6)
+    assert a.try_reserve(3)
+    a.alloc(1, reserved=True)
+    a.unreserve(2)  # the release path returns the unused tail once
+    with pytest.raises(RuntimeError, match="double-count"):
+        a.unreserve(2)  # ...a second release of the same slot raises
+    a.check(expect_reserved=0)
+    # And the ledger cross-check itself trips on a mismatch.
+    assert a.try_reserve(1)
+    with pytest.raises(AssertionError, match="ledger"):
+        a.check(expect_reserved=0)
+
+
+def test_block_allocator_atomic_under_concurrent_reservers():
+    """Hammer try_reserve/alloc/free/unreserve from many threads: the
+    check-then-act window try_reserve closes means total promises never
+    exceed the pool, no block is double-handed-out, and everything
+    returns. (This is the admission-thread-vs-engine-tick race.)"""
+    pool = 16
+    a = BlockAllocator(pool)
+    errors = []
+    over_commit = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(300):
+                n = int(rng.integers(1, 4))
+                if not a.try_reserve(n):
+                    continue
+                # reserved + in_use may NEVER exceed the pool.
+                if a.reserved + a.in_use > pool:
+                    over_commit.append((a.reserved, a.in_use))
+                k = int(rng.integers(0, n + 1))
+                got = a.alloc(k, reserved=True) if k else []
+                a.unreserve(n - k)
+                if got:
+                    a.free(got)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert not over_commit
+    a.check(expect_reserved=0)
+    assert a.available == pool and a.in_use == 0
+
+
+def test_paged_engine_leaves_allocator_clean():
+    """After a full generate over EOS-bearing traffic, every commitment
+    and every block has been returned exactly once."""
+    cfg, params = _setup()
+    srv = Server(cfg, params, ServeConfig(
+        batch_slots=2, max_len=64, kv_block_size=8))
+    reqs = make_traffic(cfg, Traffic(n_requests=5, prompt_lens=(2, 10),
+                                     max_new=(1, 6), seed=13, eos_prob=0.5))
+    done = srv.generate(reqs)
+    assert len(done) == 5
+    alloc = srv._st.alloc
+    alloc.check(expect_reserved=0)
+    assert alloc.in_use == 0 and alloc.reserved == 0
+
+
+# ------------------------------------------------- deterministic scheduling
+def test_seeded_arrival_trace_reproducible_admission_order():
+    """The same seeded open-loop trace replays to the SAME admission
+    order and the SAME tick-denominated latency stats, run to run."""
+    cfg, params = _setup()
+    t = OpenLoopTraffic(n_requests=8, prompt_lens=(2, 10), max_new=(2, 8),
+                        seed=5, rate_per_tick=0.5)
+    sc = ServeConfig(batch_slots=3, max_len=64,
+                     slo=SLOConfig(target_ttft_ticks=32.0,
+                                   target_itl_ticks=3.0))
+    runs = []
+    for _ in range(2):
+        srv = Server(cfg, params, sc)
+        done = run_open_loop(srv, make_open_loop_trace(cfg, t))
+        runs.append((
+            list(srv.admitted_uids),
+            {r.uid: r.stats["ttft_ticks"] for r in done},
+            srv.metrics["ttft_ticks_p99"],
+            srv.metrics["slo_ttft_violations"],
+            srv.metrics["slo_itl_violations"],
+        ))
+        assert len(done) == 8
+    assert runs[0] == runs[1]
+
+
+def test_priority_overrides_fifo_admission():
+    """A high-priority late arrival jumps the FIFO class at the next
+    admission decision."""
+    cfg, params = _setup()
+    reqs = make_traffic(cfg, Traffic(n_requests=4, prompt_lens=(4, 6),
+                                     max_new=(6, 6), seed=2))
+    # Everyone arrives at vt=0; uid=3 outranks the FIFO class. One slot
+    # forces strictly sequential admission, exposing the order.
+    trace = [(0.0, r) for r in reqs]
+    srv = Server(cfg, params, ServeConfig(batch_slots=1, max_len=64))
+    run_open_loop(srv, trace, priorities={3: 10.0})
+    assert list(srv.admitted_uids) == [3, 0, 1, 2]
+
+
+def test_prefill_starvation_regression_admits_within_ttft_budget():
+    """Decode-heavy load with an ITL target too tight for voluntary
+    admission: queued requests must still be admitted by the forced-TTFT
+    clause, within budget (+ the discrete-tick overshoot)."""
+    cfg, params = _setup()
+    budget = 24.0
+    sc = ServeConfig(
+        batch_slots=4, max_len=96,
+        slo=SLOConfig(target_ttft_ticks=budget, target_itl_ticks=1.0))
+    rng = np.random.default_rng(0)
+    long_req = Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, 6),
+                       max_new=48)
+    late = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 4),
+                    max_new=3) for i in range(1, 4)]
+    trace = [(0.0, long_req)] + [(float(i), r)
+                                 for i, r in enumerate(late, start=1)]
+    srv = Server(cfg, params, sc)
+    done = run_open_loop(srv, trace)
+    assert len(done) == 4
+    by_uid = {r.uid: r for r in done}
+    # The scheduler really was under ITL pressure (it deferred)...
+    assert srv.metrics["sched_deferred"] > 0
+    assert srv.metrics["sched_forced"] >= 3
+    for r in late:
+        ttft = by_uid[r.uid].stats["ttft_ticks"]
+        # ...yet no late request starved: admitted within the TTFT
+        # budget, waiting most of it out first (ITL kept them queued).
+        assert ttft <= budget + 5.0, f"uid={r.uid} starved: ttft={ttft}"
+        assert ttft >= budget / 3.0, (
+            f"uid={r.uid} admitted too eagerly for ITL=1: ttft={ttft}")
+    # The long request kept decoding throughout.
+    assert len(by_uid[0].out) == 48
+
+
+def test_generate_with_slo_matches_oracle_tokens():
+    """An SLO reshapes the admission SCHEDULE, never the tokens: greedy
+    decode is batch-composition independent, so outputs still match the
+    cache-free oracle exactly."""
+    cfg, params = _setup()
+    reqs = make_traffic(cfg, Traffic(n_requests=5, prompt_lens=(2, 10),
+                                     max_new=(2, 6), seed=9))
+    srv = Server(cfg, params, ServeConfig(
+        batch_slots=2, max_len=64,
+        slo=SLOConfig(target_ttft_ticks=16.0, target_itl_ticks=2.0)))
+    done = srv.generate(reqs)
+    want = oracle_outputs(params, cfg, reqs)
+    for r in done:
+        np.testing.assert_array_equal(np.asarray(r.out), want[r.uid])
+
+
+def test_open_loop_metrics_populated():
+    cfg, params = _setup()
+    t = OpenLoopTraffic(n_requests=6, prompt_lens=(2, 10), max_new=(2, 6),
+                        seed=3, rate_per_tick=0.4)
+    srv = Server(cfg, params, ServeConfig(
+        batch_slots=2, max_len=64,
+        slo=SLOConfig(target_ttft_ticks=32.0, target_itl_ticks=4.0)))
+    done = run_open_loop(srv, make_open_loop_trace(cfg, t))
+    m = srv.metrics
+    assert len(done) == 6 and m["completed"] == 6
+    assert m["queue_depth"] == 0 and m["queue_depth_peak"] >= 1
+    assert m["ttft_ticks_p99"] >= m["ttft_ticks_p50"] > 0
+    assert m["itl_ticks_p50"] >= 1.0
+    assert abs(m["prefill_tick_share"] + m["decode_tick_share"] - 1.0) < 1e-9
+    assert m["sched_admitted"] == m["admitted"] == 6
+    for r in done:
+        s = r.stats
+        assert s["ttft_ticks"] >= s["queue_ticks"] >= 0
+        assert s["itl_ticks_max"] >= 1.0 or s["tokens"] == 1
+
+
+# ------------------------------------------------------------ async facade
+def test_queue_drain_token_parity_with_batch_generate():
+    """The acceptance bar: AsyncServer serving the same requests off its
+    live queue produces token-identical outputs to synchronous
+    Server.generate."""
+    cfg, params = _setup()
+    traffic = Traffic(n_requests=6, prompt_lens=(2, 10), max_new=(2, 6),
+                      seed=21)
+    reqs = make_traffic(cfg, traffic)
+    sync = Server(cfg, params, ServeConfig(batch_slots=3, max_len=64))
+    want = {r.uid: np.asarray(r.out) for r in sync.generate(reqs)}
+
+    asrv = AsyncServer(cfg, params,
+                       ServeConfig(batch_slots=3, max_len=64), start=False)
+    for r in make_traffic(cfg, traffic):
+        asrv.submit(r.prompt, max_new=r.max_new, eos_id=r.eos_id,
+                    uid=r.uid)
+    asrv.start()
+    done = asrv.drain(timeout=300)
+    asrv.shutdown(timeout=30)
+    assert len(done) == 6
+    for r in done:
+        np.testing.assert_array_equal(np.asarray(r.out), want[r.uid])
+    # All submitted before start => FIFO admission, PR 1-3 schedule.
+    assert list(asrv.server.admitted_uids) == sorted(want)
+    assert asrv.metrics["completed"] == 6
+    assert asrv.metrics["ttft_ticks_p99"] > 0
+
+
+def test_async_stream_and_result_agree():
+    cfg, params = _setup()
+    with AsyncServer(cfg, params,
+                     ServeConfig(batch_slots=2, max_len=64)) as asrv:
+        h = asrv.submit(np.array([1, 2, 3]), max_new=5)
+        streamed = [np.asarray(t) for t in h.stream(timeout=120)]
+        r = h.result(timeout=10)
+        assert h.done
+        np.testing.assert_array_equal(np.array(streamed), np.asarray(r.out))
+        assert r.stats["tokens"] == 5
+    # Context exit shut the engine down; further submits are refused.
+    with pytest.raises(RuntimeError, match="shut down"):
+        asrv.submit(np.array([1]), max_new=1)
+
+
+def test_async_shutdown_abort_fails_outstanding_handles():
+    """shutdown(drain=False) stops the engine promptly and fails any
+    unfinished submissions instead of leaving their waiters hanging."""
+    cfg, params = _setup()
+    asrv = AsyncServer(cfg, params, ServeConfig(batch_slots=1, max_len=96))
+    h = asrv.submit(np.array([1, 2, 3]), max_new=64)
+    asrv.shutdown(drain=False, timeout=120)
+    with pytest.raises(RuntimeError, match="shut down"):
+        h.result(timeout=10)
+
+
+def test_async_submit_rejects_impossible_requests_up_front():
+    cfg, params = _setup()
+    with AsyncServer(cfg, params,
+                     ServeConfig(batch_slots=1, max_len=16),
+                     start=False) as asrv:
+        with pytest.raises(ValueError, match="do not fit"):
+            asrv.submit(np.arange(40), max_new=4)
+        h = asrv.submit(np.array([1, 2]), max_new=2, uid=7)
+        # A duplicate uid would cross the handles' token streams.
+        with pytest.raises(ValueError, match="already in flight"):
+            asrv.submit(np.array([3, 4]), max_new=2, uid=7)
+        assert h.result(timeout=120).stats["tokens"] == 2

@@ -1,0 +1,65 @@
+"""Lint gate: every relative link in the repo's markdown docs resolves.
+
+Scans README.md, docs/*.md and the other top-level *.md files for
+markdown links/images ``[text](target)`` and fails if a RELATIVE target
+(no scheme, not an anchor) does not exist on disk, resolved against the
+linking file's directory. External URLs and pure #anchors are ignored --
+this is a cross-reference check, not a web crawler.
+
+Usage:
+    python tools/check_docs_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target), tolerating an optional "title" and surrounding spaces;
+# nested parens inside targets are not used in this repo's docs.
+LINK_RE = re.compile(r"\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(root: str):
+    for entry in sorted(os.listdir(root)):
+        if entry.endswith(".md"):
+            yield os.path.join(root, entry)
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        for entry in sorted(os.listdir(docs)):
+            if entry.endswith(".md"):
+                yield os.path.join(docs, entry)
+
+
+def check(root: str) -> int:
+    failures = []
+    n_links = 0
+    for path in md_files(root):
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        base = os.path.dirname(path)
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            n_links += 1
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+                line = text[: m.start()].count("\n") + 1
+                failures.append(
+                    f"{os.path.relpath(path, root)}:{line}: broken link "
+                    f"-> {target}"
+                )
+    for f in failures:
+        print(f"DOCS LINK: {f}", file=sys.stderr)
+    if failures:
+        return 1
+    print(f"docs link check OK ({n_links} relative links resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else os.getcwd()))
