@@ -23,6 +23,11 @@ this job. Per benchmark:
     trace -- p99 TTFT/ITL in virtual ticks must not regress and
     SLO-violation counts must not grow (all deterministic: virtual
     clock + shape-derived cost model, no wall time).
+  * serve_cache_skip decode_attn cases (BENCH_attn.json, gated against
+    benchmarks/baselines/attn_baseline.json): the paged decode-attention
+    kernel must stay token/skip-identical to the full-view gather path
+    (parity bit), its modeled HBM bytes must not regress, and at <= 50%
+    mean pool occupancy it must model >= 50% fewer bytes than gather.
 """
 from __future__ import annotations
 
@@ -31,6 +36,10 @@ import sys
 
 TOL = 1.001  # modeled bytes are deterministic; allow only float jitter
 MIN_SAVED_AT_50 = 0.30
+# Acceptance floor for the paged decode-attention kernel: at <= 50% mean
+# pool occupancy it must model >= 50% fewer decode-attention HBM bytes
+# than the full-view gather path.
+MIN_ATTN_SAVED_AT_HALF_OCC = 0.50
 
 
 def _check_mlp_case(c, b, failures):
@@ -112,6 +121,42 @@ def _check_serve_case(c, b, failures):
                 f"{c['case']}: SparCE engine skip work vanished "
                 f"({b['tile_dots']['skipped']} -> "
                 f"{c['tile_dots']['skipped']})"
+            )
+    # Paged decode-attention fields (decode_attn/* cases, gated against
+    # benchmarks/baselines/attn_baseline.json): modeled bytes come from
+    # the block-fetch accounting (deterministic), parity is asserted by
+    # the "parity" check above.
+    if "attn_bytes" in c and "attn_bytes" in b:
+        got = c["attn_bytes"]["paged"]
+        want = b["attn_bytes"]["paged"]
+        if got > want * TOL:
+            failures.append(
+                f"{c['case']}: paged decode-attention modeled HBM bytes "
+                f"regressed {want:.0f} -> {got:.0f}"
+            )
+        if (c["attn_bytes"]["saved_frac"]
+                < b["attn_bytes"]["saved_frac"] - 1e-6):
+            failures.append(
+                f"{c['case']}: decode-attention byte saving shrank "
+                f"{b['attn_bytes']['saved_frac']:.3f} -> "
+                f"{c['attn_bytes']['saved_frac']:.3f}"
+            )
+        occ = c.get("mean_pool_occupancy")
+        if (occ is not None and occ <= 0.5
+                and c["attn_bytes"]["saved_frac"]
+                < MIN_ATTN_SAVED_AT_HALF_OCC):
+            failures.append(
+                f"{c['case']}: paged kernel saves only "
+                f"{c['attn_bytes']['saved_frac']:.1%} decode-attention "
+                f"bytes at {occ:.1%} mean pool occupancy (need >= "
+                f"{MIN_ATTN_SAVED_AT_HALF_OCC:.0%} at <= 50%)"
+            )
+    if "blocks_skipped_frac" in c and "blocks_skipped_frac" in b:
+        if c["blocks_skipped_frac"] < b["blocks_skipped_frac"] - 1e-6:
+            failures.append(
+                f"{c['case']}: skipped-block fraction shrank "
+                f"{b['blocks_skipped_frac']:.3f} -> "
+                f"{c['blocks_skipped_frac']:.3f}"
             )
 
 

@@ -46,7 +46,8 @@ def main() -> None:
          functools.partial(fused_mlp.run, json_path=jp("BENCH_mlp.json"))),
         ("serve_skip",
          functools.partial(serve_cache_skip.run,
-                           json_path=jp("BENCH_serve.json"))),
+                           json_path=jp("BENCH_serve.json"),
+                           attn_json_path=jp("BENCH_attn.json"))),
     ]
     if not args.skip_roofline:
         rdir = args.roofline_dir

@@ -244,6 +244,35 @@ def kv_row_bytes(cfg) -> int:
     return per_layer * cfg.num_layers
 
 
+def decode_attn_hbm_bytes(
+    *, blocks_fetched: int, blocks_total: int, block_size: int,
+    row_bytes: int,
+) -> dict:
+    """Modeled decode-attention KV traffic: full-view gather vs paged
+    kernel, in pool-block units.
+
+    The gather path materializes every table entry of every slot each
+    tick (``blocks_total`` = ticks x slots x max_blocks), paying full
+    HBM reads for dead slots, blocks past each live length, and null
+    padding -- the pre-identifiable redundant region. The paged kernel
+    DMAs only ``blocks_fetched`` (= sum of ``ceil(len/block_size)`` over
+    live slots per tick). ``row_bytes`` is
+    :func:`kv_row_bytes` -- one cached token row across ALL attention
+    layers -- so the figures are whole-model bytes. q/logit traffic is
+    identical between the paths and left out of the model, as is the
+    dead-slot null-block guard DMA (<= 1 block per dead slot per tick,
+    often pipeline-elided -- see
+    ``kernels.paged_decode_attn.decode_attn_block_counts``).
+    """
+    gather = int(blocks_total) * block_size * row_bytes
+    paged = int(blocks_fetched) * block_size * row_bytes
+    return {
+        "gather": int(gather),
+        "paged": int(paged),
+        "saved_frac": 1.0 - paged / max(gather, 1),
+    }
+
+
 # ----------------------------------------------------------- tick-time model
 @dataclasses.dataclass(frozen=True)
 class TickCosts:

@@ -1,6 +1,10 @@
 """Pallas TPU kernels for SparCE (validated via interpret=True on CPU).
 
-Modules: sparce_gemm (gated/compacted GEMM), relu_bitmap (fused SVC),
-ops (padded jit wrappers), ref (pure-jnp oracles).
+Modules: sparce_gemm (gated/compacted GEMM), sparce_mlp (fused MLP
+megakernel), paged_decode_attn (fetch-skipping decode attention over the
+paged KV pool), relu_bitmap (fused SVC), ops (padded jit wrappers), ref
+(pure-jnp oracles).
 """
-from repro.kernels import ops, ref, relu_bitmap, sparce_decode_attn, sparce_gemm  # noqa: F401
+from repro.kernels import (  # noqa: F401
+    ops, paged_decode_attn, ref, relu_bitmap, sparce_gemm, sparce_mlp,
+)

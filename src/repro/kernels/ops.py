@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.sasa import SkipPlan
 from repro.core.sprf import TileBitmap
+from repro.kernels import paged_decode_attn as _pda
 from repro.kernels import sparce_gemm as _sg
 from repro.kernels import relu_bitmap as _rb
 from repro.kernels import sparce_mlp as _sm
@@ -145,6 +146,90 @@ def sparce_mlp_fused(
     return y[:m, :n], TileBitmap(
         bits=bits, block=(block_m, block_f), shape=(m, fdim)
     )
+
+
+def _pad_last(x: jax.Array, q: int) -> jax.Array:
+    """Zero-pad the last axis up to a multiple of ``q``."""
+    d = x.shape[-1]
+    pd = _ceil_to(d, q)
+    if pd == d:
+        return x
+    pads = [(0, 0)] * (x.ndim - 1) + [(0, pd - d)]
+    return jnp.pad(x, pads)
+
+
+def paged_decode_attn(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    feat_align: int = 1,
+    interpret: bool = True,
+) -> jax.Array:
+    """Ragged-shape wrapper over the paged GQA decode kernel.
+
+    Unlike the retired contiguous prototype (which hard-errored on
+    ``L % block_l != 0``), the sequence dimension needs no tile
+    alignment at all: the kernel grids over the table width
+    (``max_blocks``, any positive int -- the pool is sized by
+    ``ceil(max_rows / block_size)``, never rounded up) and the index-map
+    clamp makes entries at/past each live length free, so there is
+    nothing to pad there. ``feat_align > 1`` additionally pads ragged
+    head dims up to that many lanes (zero features move no scores; the
+    padded output columns are sliced off) -- an OPT-IN for compiled TPU
+    mode with a non-lane-aligned head dim, because padding the pool
+    here copies it every call; production pools should be ALLOCATED
+    lane-aligned instead (head dims 64/128 already are), and interpret
+    mode needs no alignment.
+
+    q: (B, KV, g, D); pools: (nb, bs, KV, D); block_tables:
+    int32 (B, max_blocks); lengths: int32 (B,) live rows (0 = inactive).
+    """
+    D = q.shape[-1]
+    scale = scale if scale is not None else D**-0.5
+    out = _pda.paged_gqa_decode_attn(
+        _pad_last(q, feat_align),
+        _pad_last(k_pool, feat_align),
+        _pad_last(v_pool, feat_align),
+        block_tables,
+        jnp.minimum(lengths, block_tables.shape[1] * k_pool.shape[1]),
+        scale=scale, interpret=interpret,
+    )
+    return out[..., :D]
+
+
+def paged_mla_decode_attn(
+    q_lat: jax.Array,
+    q_rope: jax.Array,
+    ckv_pool: jax.Array,
+    kr_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float,
+    feat_align: int = 1,
+    interpret: bool = True,
+) -> jax.Array:
+    """Ragged-shape wrapper over the paged MLA absorbed-decode kernel.
+
+    ``feat_align > 1`` pads the latent (r) and rope dims up to that
+    many lanes (see :func:`paged_decode_attn` for when to opt in).
+    Returns (B, h, r) latent-space context.
+    """
+    r = q_lat.shape[-1]
+    out = _pda.paged_mla_decode_attn(
+        _pad_last(q_lat, feat_align),
+        _pad_last(q_rope, feat_align),
+        _pad_last(ckv_pool, feat_align),
+        _pad_last(kr_pool, feat_align),
+        block_tables,
+        jnp.minimum(lengths, block_tables.shape[1] * ckv_pool.shape[1]),
+        scale=scale, interpret=interpret,
+    )
+    return out[..., :r]
 
 
 def relu_with_bitmap(

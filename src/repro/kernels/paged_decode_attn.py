@@ -1,0 +1,336 @@
+"""Paged decode attention: fetch-skipping Pallas kernels straight out of
+the shared KV pool.
+
+PR 3 made the paged KV pool the serving default, but every decode tick
+still materialized a contiguous ``(B, max_blocks * block_size, ...)``
+gather of the whole pool view before dense jnp attention -- full HBM
+traffic for dead slots, for blocks past each request's live length, and
+for null-block padding entries. The redundant region is pre-identifiable
+from METADATA alone (block tables + per-slot lengths), which is the
+paper's dynamic-sparsity setting exactly: so the fix is to never fetch
+it, not to mask it after the fetch.
+
+Mapping onto the paper's microarchitecture:
+
+  * **SASA entry** -- the scalar-prefetched ``(block_tables, lengths)``
+    pair lives in SMEM before the kernel body runs: the skip decision is
+    resolvable before any operand fetch, like the SASA table consulted
+    at fetch stage.
+  * **PSRU** -- the skip is enforced in TWO places, like the paper's
+    pre-execute resolution: the BlockSpec index map CLAMPS dead grid
+    steps onto the slot's last live block (the block index stops
+    changing, so the pipeline issues no further HBM->VMEM DMA -- fetch
+    elision), and ``pl.when`` predicates the MXU work (compute elision).
+    Inactive slots (length 0) clamp onto table entry 0, which the server
+    keeps pointing at the null block.
+  * **SpRF** -- the online-softmax statistics (m, l, acc) carried in
+    VMEM scratch across one slot's blocks are the per-register running
+    state the skip must not corrupt: a clamped re-fetch is kept out of
+    the accumulator by the predicate, proven by NaN-poison tests.
+
+Two kernels share the structure: ``paged_gqa_decode_attn`` (grouped
+query heads over a (nb, bs, KV, D) pool) and ``paged_mla_decode_attn``
+(DeepSeek absorbed decode: scores and context both in the compressed
+latent space over (nb, bs, r) / (nb, bs, rope) pools). Both are
+validated in interpret mode (the PR 2 megakernel strategy); the
+deployment flag flips to compiled TPU kernels.
+
+Grid: ``(B, max_blocks)`` with the block axis fastest. ``max_blocks``
+(the table width) needs NO tile alignment: any padded/dead table column
+is clamped by the index map, so it costs neither a fetch nor a dot. Use
+the padded wrappers in ``kernels/ops.py`` for ragged feature dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _last_live_block(length, block_size: int):
+    """Ordinal (0-based, within the slot's table) of the last live block.
+
+    Slots with length 0 clamp onto table entry 0 -- the server keeps a
+    dead slot's whole table row at the null block, so the (single,
+    possibly elided) fetch lands on null rows, never on a freed block.
+    """
+    return jnp.maximum((length + block_size - 1) // block_size - 1, 0)
+
+
+def clamped_block_ids(
+    block_tables: np.ndarray, lengths: np.ndarray, block_size: int
+) -> np.ndarray:
+    """Host-side mirror of the kernels' index-map math: the pool block id
+    grid step (b, j) actually maps to, for every j in the table width.
+
+    This is the fetch-elision contract in closed form -- tests enumerate
+    it to prove that no grid step can ever name a block outside the
+    slot's live table prefix (or, for a dead slot, its entry 0): the DMA
+    for a skipped block is not masked after the fact, it is never
+    addressed in the first place.
+    """
+    tbl = np.asarray(block_tables)
+    ln = np.asarray(lengths)
+    B, max_blocks = tbl.shape
+    last = np.maximum(-(-ln // block_size) - 1, 0)  # (B,)
+    j = np.arange(max_blocks)[None, :]
+    jj = np.minimum(j, last[:, None])
+    return np.take_along_axis(tbl, jj, axis=1)
+
+
+# ============================================================== GQA kernel
+def _gqa_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                acc_ref, m_ref, l_ref, *, block_size: int, n_blocks: int,
+                scale: float):
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    start = j * block_size
+    # PSRU compute predicate: the whole block is at/past the live length
+    # (covers dead slots, length 0). The paired fetch predicate is the
+    # index-map clamp below -- same condition, resolved before the DMA.
+    live = start < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0]  # (KV, g, D)
+        k = k_ref[0]  # (bs, KV, D)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k,
+            dimension_numbers=(((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (KV, g, bs) f32 -- scale after the dot, like the
+        # gather path's einsum(...) * hd**-0.5.
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(pos < length, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v,
+            dimension_numbers=(((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32,
+        )  # (KV, g, D)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_gqa_decode_attn(
+    q: jax.Array,  # (B, KV, g, D) grouped query heads
+    k_pool: jax.Array,  # (nb, bs, KV, D) shared pool keys
+    v_pool: jax.Array,  # (nb, bs, KV, D) shared pool values
+    block_tables: jax.Array,  # int32 (B, max_blocks), 0 = null block
+    lengths: jax.Array,  # int32 (B,) live rows incl. this tick's write
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """(B, KV, g, D) attention over each slot's live pool blocks.
+
+    ``lengths[b] == 0`` marks an inactive slot: no block of its table is
+    fetched or dotted and its output rows are zero (the serving engine
+    gates dead slots' residual deltas anyway).
+    """
+    B, KV, g, D = q.shape
+    nb, bs = k_pool.shape[0], k_pool.shape[1]
+    max_blocks = block_tables.shape[1]
+    scale = scale if scale is not None else D**-0.5
+
+    def kv_index(b, j, tbl_ref, len_ref):
+        # Fetch elision: dead grid steps clamp onto the slot's last live
+        # block, so the block index stops changing and no DMA is issued.
+        jj = jnp.minimum(j, _last_live_block(len_ref[b], bs))
+        return (tbl_ref[b, jj], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, KV, g, D), lambda b, j, t, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, D), kv_index),
+            pl.BlockSpec((1, bs, KV, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, KV, g, D), lambda b, j, t, ln: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, g, D), jnp.float32),
+            pltpu.VMEM((KV, g), jnp.float32),
+            pltpu.VMEM((KV, g), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _gqa_kernel, block_size=bs, n_blocks=max_blocks, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pool, v_pool)
+
+
+# ============================================================== MLA kernel
+def _mla_kernel(tbl_ref, len_ref, ql_ref, qr_ref, ckv_ref, kr_ref, o_ref,
+                acc_ref, m_ref, l_ref, *, block_size: int, n_blocks: int,
+                scale: float):
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    start = j * block_size
+    live = start < length
+
+    @pl.when(live)
+    def _compute():
+        ql = ql_ref[0]  # (h, r) latent-absorbed queries
+        qr = qr_ref[0]  # (h, rope)
+        ckv = ckv_ref[0]  # (bs, r) compressed latents
+        kr = kr_ref[0]  # (bs, rope) shared rope keys
+        # Scores in the latent space: the two dot products sum BEFORE
+        # the scale, mirroring the gather path's (e1 + e2) * scale.
+        s = (
+            jax.lax.dot_general(
+                ql, ckv, dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            + jax.lax.dot_general(
+                qr, kr, dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        ) * scale  # (h, bs) f32
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        ctx = jax.lax.dot_general(
+            p.astype(ckv.dtype), ckv,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (h, r) context still in the latent space
+        acc_ref[...] = acc_ref[...] * corr[..., None] + ctx
+        m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_mla_decode_attn(
+    q_lat: jax.Array,  # (B, h, r) wuk-absorbed queries
+    q_rope: jax.Array,  # (B, h, rope)
+    ckv_pool: jax.Array,  # (nb, bs, r) compressed-latent pool
+    kr_pool: jax.Array,  # (nb, bs, rope) shared rope-key pool
+    block_tables: jax.Array,  # int32 (B, max_blocks)
+    lengths: jax.Array,  # int32 (B,)
+    *,
+    scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    """(B, h, r) latent-space context over each slot's live pool blocks.
+
+    The caller applies ``wuv`` to decompress -- attention itself never
+    leaves the compressed space (the absorbed-decode trick), so the
+    fetched bytes per block are (r + rope) wide, not heads x head_dim.
+    """
+    B, h, r = q_lat.shape
+    rope = q_rope.shape[-1]
+    nb, bs = ckv_pool.shape[0], ckv_pool.shape[1]
+    max_blocks = block_tables.shape[1]
+
+    def ckv_index(b, j, tbl_ref, len_ref):
+        jj = jnp.minimum(j, _last_live_block(len_ref[b], bs))
+        return (tbl_ref[b, jj], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, h, r), lambda b, j, t, ln: (b, 0, 0)),
+            pl.BlockSpec((1, h, rope), lambda b, j, t, ln: (b, 0, 0)),
+            pl.BlockSpec((1, bs, r), ckv_index),
+            pl.BlockSpec((1, bs, rope), ckv_index),
+        ],
+        out_specs=pl.BlockSpec((1, h, r), lambda b, j, t, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, r), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _mla_kernel, block_size=bs, n_blocks=max_blocks, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, h, r), q_lat.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q_lat, q_rope, ckv_pool, kr_pool)
+
+
+# ======================================================= savings accounting
+def decode_attn_block_counts(
+    lengths, max_blocks: int, block_size: int
+) -> tuple[int, int]:
+    """(fetched, total) pool blocks one decode tick touches, in
+    block-table units -- the successor of the retired contiguous
+    prototype's tile accounting.
+
+    ``lengths`` are per-slot live rows INCLUDING this tick's write (0 =
+    inactive slot). ``total`` is what the gather path materializes: the
+    full ``max_blocks`` view for every slot, dead or alive; ``fetched``
+    is what the paged kernel DMAs: ``ceil(len / block_size)`` live
+    blocks per slot and nothing for inactive slots.
+
+    Known approximation (the PR 2 ``sparce_gemm`` nnz==0 guard-fetch
+    class): a dead slot's grid steps all clamp onto its table entry 0
+    (the null block), which costs AT MOST one null-block DMA per
+    dead-slot run on hardware -- and none when the pipeline's previous
+    block index was already 0. That bounded guard fetch is not counted
+    here, so ``fetched`` understates real traffic by <= 1 block per
+    dead slot per tick; at ``max_blocks`` blocks per live view the bias
+    on the saved fraction is O(1/max_blocks) of the dead-slot share.
+    """
+    ln = np.asarray(lengths, np.int64)
+    fetched = int(np.sum(-(-np.maximum(ln, 0) // block_size)))
+    return fetched, int(ln.shape[0]) * int(max_blocks)
+
+
+def decode_attn_savings(lengths, max_blocks: int, block_size: int) -> float:
+    """Fraction of pool-block fetches (fetch+compute) the paged kernel
+    skips vs the full-view gather -- the paper's 'redundant ops' metric
+    for the serving cache, in block-table units."""
+    fetched, total = decode_attn_block_counts(lengths, max_blocks,
+                                              block_size)
+    if total == 0:
+        return 0.0
+    return 1.0 - fetched / total

@@ -95,7 +95,8 @@ def decode_attn_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
     *, scale: float | None = None,
 ) -> jax.Array:
-    """Oracle for sparce_decode_attn: masked softmax over live prefixes.
+    """Oracle for paged decode attention, on an already-gathered view:
+    masked softmax over live prefixes.
 
     q: (B, KV, g, D); k/v: (B, L, KV, D); lengths: (B,).
     """
@@ -110,3 +111,46 @@ def decode_attn_ref(
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgl,blkd->bkgd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def gather_pool_view(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(B, max_blocks * bs, ...) contiguous-looking gather of each slot's
+    pool blocks in table order -- the full-view materialization the
+    paged kernels exist to avoid, kept as the oracle's first step."""
+    nb, bs = pool.shape[0], pool.shape[1]
+    flat = pool.reshape((nb * bs,) + pool.shape[2:])
+    idx = (block_tables[:, :, None] * bs
+           + jnp.arange(bs, dtype=jnp.int32)[None, None, :])
+    B, mb = block_tables.shape
+    return flat[idx.reshape(B, mb * bs)]
+
+
+def paged_gqa_decode_attn_ref(
+    q, k_pool, v_pool, block_tables, lengths, *, scale=None
+) -> jax.Array:
+    """Oracle for paged_gqa_decode_attn: gather the full view, then
+    masked softmax -- exactly the serving gather path's dataflow."""
+    k = gather_pool_view(k_pool, block_tables)
+    v = gather_pool_view(v_pool, block_tables)
+    return decode_attn_ref(q, k, v, lengths, scale=scale)
+
+
+def paged_mla_decode_attn_ref(
+    q_lat, q_rope, ckv_pool, kr_pool, block_tables, lengths, *, scale
+) -> jax.Array:
+    """Oracle for paged_mla_decode_attn: absorbed decode over the
+    gathered latent view. q_lat: (B, h, r); q_rope: (B, h, rope)."""
+    cc = gather_pool_view(ckv_pool, block_tables)  # (B, L, r)
+    cr = gather_pool_view(kr_pool, block_tables)  # (B, L, rope)
+    L = cc.shape[1]
+    s = (
+        jnp.einsum("bhr,blr->bhl", q_lat.astype(jnp.float32),
+                   cc.astype(jnp.float32))
+        + jnp.einsum("bhr,blr->bhl", q_rope.astype(jnp.float32),
+                     cr.astype(jnp.float32))
+    ) * scale
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhl,blr->bhr", p, cc.astype(jnp.float32))
+    return ctx.astype(q_lat.dtype)

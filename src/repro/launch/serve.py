@@ -3,8 +3,8 @@
     python -m repro.launch.serve --arch smollm-135m --requests 16 \
         [--reduced] [--max-new 32] [--mixed] [--sparce] [--eos-id N] \
         [--kv-block-size 16] [--kv-pool-blocks N] [--prefill-buckets 8,16,32] \
-        [--open-loop] [--arrival-rate 8] [--slo-ttft-ticks 64] \
-        [--slo-itl-ticks 8]
+        [--attn-kernel gather|paged] [--open-loop] [--arrival-rate 8] \
+        [--slo-ttft-ticks 64] [--slo-itl-ticks 8]
 
 --mixed draws per-request prompt lengths and decode budgets from a range
 (the continuous batcher's target workload); --sparce turns on the SparCE
@@ -33,6 +33,16 @@ pool to oversubscribe (admission then waits on the free list, not on
 slots x max_len); --kv-block-size 0 restores the contiguous layout.
 Prompt lengths round up to --prefill-buckets (default: powers of two) so
 the number of compiled prefill traces stays bounded under mixed traffic.
+
+Decode attention: --attn-kernel paged runs decode attention as a Pallas
+kernel straight out of the KV pool -- scalar-prefetched block tables +
+lengths (the SASA-entry analogue) let it never DMA dead slots' blocks,
+blocks past each live length, or null padding entries (index-map clamp =
+the PSRU's skip-before-fetch), instead of materializing the full
+(B, max_blocks x block_size) gather every tick. Token streams and skip
+statistics are identical to the default gather path (CI-gated); metrics
+gain the realized block-skip fraction and modeled attention HBM bytes
+saved.
 """
 from __future__ import annotations
 
@@ -79,6 +89,13 @@ def main(argv=None):
                     help="comma-separated prompt-length buckets (padded, "
                          "masked-tail prefill); default = powers of two "
                          "up to --max-len; 'off' = exact-length prefill")
+    ap.add_argument("--attn-kernel", default="gather",
+                    choices=("gather", "paged"),
+                    help="decode attention over the paged pool: 'gather' "
+                         "materializes full per-slot views (parity "
+                         "oracle), 'paged' = fetch-skipping Pallas "
+                         "kernel straight out of the KV pool (needs "
+                         "--kv-block-size > 0)")
     ap.add_argument("--open-loop", action="store_true",
                     help="serve via AsyncServer: a background engine "
                          "thread drains the live queue while requests "
@@ -143,7 +160,7 @@ def main(argv=None):
         seed=args.seed, sparsity=sparsity,
         kv_block_size=args.kv_block_size,
         kv_pool_blocks=args.kv_pool_blocks,
-        prefill_buckets=buckets, slo=slo)
+        prefill_buckets=buckets, attn_kernel=args.attn_kernel, slo=slo)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -211,6 +228,14 @@ def main(argv=None):
               f"({saved}, "
               f"{m['kv_reserved_bytes_per_token']/1e3:.1f} KB/token); "
               f"{int(m['prefill_traces'])} prefill traces")
+        if m["attn_blocks_total"]:
+            realized = ("saved" if m["attn_kernel_paged"]
+                        else "skippable (run --attn-kernel paged)")
+            print(f"  decode attn: {int(m['attn_blocks_fetched'])}/"
+                  f"{int(m['attn_blocks_total'])} pool-block fetches "
+                  f"(skip {m['attn_block_skip_fraction']:.1%}); "
+                  f"{(m['attn_bytes_gather'] - m['attn_bytes_paged'])/1e6:.2f}"
+                  f" MB HBM {realized} vs full-view gather")
     if args.open_loop or slo is not None:
         print(f"  queue: depth peak {int(m['queue_depth_peak'])}, "
               f"admission {int(m['sched_admitted'])} admitted / "

@@ -56,19 +56,15 @@ def _slot_lengths(cache, batch: int) -> jax.Array:
     )
 
 
-def _paged_append_and_view(
+def _paged_append(
     cache: PagedKVCache, block_tables: jax.Array,
     upd_k: jax.Array, upd_v: jax.Array,
-) -> Tuple[PagedKVCache, jax.Array, jax.Array, jax.Array]:
-    """Write one new row per slot into the pool, gather per-slot views.
+) -> Tuple[PagedKVCache, jax.Array]:
+    """Write one new row per slot into the pool (no view gather).
 
     block_tables: int32 (B, max_blocks) pool block ids (0 = unassigned /
     null). upd_k/upd_v: (B, ...) the decode step's new row per slot.
-    Returns (new_cache, view_k, view_v, idx) where view_* are
-    (B, max_blocks * block_size, ...) contiguous-looking gathers of each
-    slot's blocks and idx the pre-write lengths. Rows gathered from
-    unassigned table entries come from the null block and are masked off
-    by the caller's ``<= idx`` validity mask.
+    Returns (new_cache, idx) with idx the pre-write lengths.
     """
     nb, bs = cache.k.shape[0], cache.k.shape[1]
     B, max_blocks = block_tables.shape
@@ -82,15 +78,41 @@ def _paged_append_and_view(
     vf = cache.v.reshape((nb * bs,) + cache.v.shape[2:])
     kf = kf.at[row].set(upd_k.astype(kf.dtype))
     vf = vf.at[row].set(upd_v.astype(vf.dtype))
-    gather = (block_tables[:, :, None] * bs
-              + jnp.arange(bs, dtype=jnp.int32)[None, None, :])
-    flat_idx = gather.reshape(B, max_blocks * bs)
-    view_k = kf[flat_idx]  # (B, L_view, ...)
-    view_v = vf[flat_idx]
     new_cache = PagedKVCache(
         kf.reshape(cache.k.shape), vf.reshape(cache.v.shape), idx + 1
     )
-    return new_cache, view_k, view_v, idx
+    return new_cache, idx
+
+
+def _paged_view(
+    cache: PagedKVCache, block_tables: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Gather (B, max_blocks * block_size, ...) per-slot views of the
+    pool -- the attn_kernel='gather' parity oracle. This materializes
+    EVERY table entry (dead slots, blocks past the live length, null
+    padding) in HBM; the paged Pallas kernel exists to never fetch
+    those (kernels/paged_decode_attn.py). Rows gathered from unassigned
+    table entries come from the null block and are masked off by the
+    caller's validity mask.
+    """
+    nb, bs = cache.k.shape[0], cache.k.shape[1]
+    B, max_blocks = block_tables.shape
+    kf = cache.k.reshape((nb * bs,) + cache.k.shape[2:])
+    vf = cache.v.reshape((nb * bs,) + cache.v.shape[2:])
+    gather = (block_tables[:, :, None] * bs
+              + jnp.arange(bs, dtype=jnp.int32)[None, None, :])
+    flat_idx = gather.reshape(B, max_blocks * bs)
+    return kf[flat_idx], vf[flat_idx]
+
+
+def _paged_eff_lengths(idx: jax.Array, active) -> jax.Array:
+    """Rows the paged kernel must attend over per slot, INCLUDING this
+    tick's write: 0 for inactive slots, so the kernel fetches nothing
+    for them (their residual deltas are gated off downstream anyway)."""
+    eff = idx + 1
+    if active is None:
+        return eff
+    return jnp.where(active.astype(jnp.float32) > 0, eff, 0)
 
 
 def _advance_by(idx: jax.Array, S: int, advance) -> jax.Array:
@@ -226,6 +248,8 @@ def gqa_forward(
     cache=None,
     block_tables: Optional[jax.Array] = None,
     advance: Optional[jax.Array] = None,
+    attn_kernel: str = "gather",
+    active: Optional[jax.Array] = None,
     chunk_q: Optional[int] = None,
     chunk_k: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[KVCache]]:
@@ -236,6 +260,14 @@ def gqa_forward(
     admission scatters into pool blocks). ``advance`` (int32 (B,)) is the
     bucketed-prefill true length: the cache length advances by it rather
     than by the padded S.
+
+    ``attn_kernel`` selects the paged-decode implementation (static):
+    'gather' materializes the full per-slot pool view then runs dense
+    jnp attention (the parity oracle); 'paged' runs the fetch-skipping
+    Pallas kernel straight out of the pool, never DMAing dead slots'
+    blocks, blocks past the live length, or null padding entries.
+    ``active`` (f32 (B,), serving only) marks live slots so the paged
+    kernel can skip dead slots' fetches entirely.
     """
     B, S, d = x.shape
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -262,29 +294,43 @@ def gqa_forward(
         # Decode: write k/v at each slot's own length, attend over that
         # slot's live prefix. Per-slot indices are what let the server
         # backfill a freed slot while its neighbours keep decoding.
+        g = h // kv
+        qd = q.reshape(B, kv, g, hd)
+        ck = cv = None
         if isinstance(cache, PagedKVCache):
             if block_tables is None:
                 raise ValueError("paged decode needs block_tables")
-            new_cache, ck, cv, idx = _paged_append_and_view(
+            new_cache, idx = _paged_append(
                 cache, block_tables, k[:, 0], v[:, 0]
             )
+            if attn_kernel != "paged":
+                ck, cv = _paged_view(new_cache, block_tables)
         else:
             idx = _slot_lengths(cache, B)  # (B,)
             ck = _scatter_rows(cache.k, k, idx)
             cv = _scatter_rows(cache.v, v, idx)
             new_cache = KVCache(ck, cv, idx + 1)
-        L = ck.shape[1]
-        g = h // kv
-        qd = q.reshape(B, kv, g, hd)
-        # bf16 cache reads with f32 accumulation (no f32 cache copy).
-        s = jnp.einsum(
-            "bkgd,blkd->bkgl", qd, ck, preferred_element_type=jnp.float32
-        ) * (hd**-0.5)
-        valid = jnp.arange(L)[None, :] <= idx[:, None]  # (B, L)
-        s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
-        p = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bkgl,blkd->bkgd", p.astype(cv.dtype), cv,
-                       preferred_element_type=jnp.float32)
+        if ck is None:
+            # Fetch-skipping kernel straight out of the pool: the
+            # scalar-prefetched (tables, lengths) pair is the SASA
+            # entry, the clamped index map the PSRU fetch elision.
+            from repro.kernels import ops as kops
+            o = kops.paged_decode_attn(
+                qd, new_cache.k, new_cache.v, block_tables,
+                _paged_eff_lengths(idx, active), scale=hd**-0.5,
+            )
+        else:
+            L = ck.shape[1]
+            # bf16 cache reads with f32 accumulation (no f32 cache copy).
+            s = jnp.einsum(
+                "bkgd,blkd->bkgl", qd, ck,
+                preferred_element_type=jnp.float32
+            ) * (hd**-0.5)
+            valid = jnp.arange(L)[None, :] <= idx[:, None]  # (B, L)
+            s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bkgl,blkd->bkgd", p.astype(cv.dtype), cv,
+                           preferred_element_type=jnp.float32)
         out = o.reshape(B, 1, h, hd).astype(x.dtype)
     else:
         # Prefill into cache at each slot's current offset.
@@ -355,6 +401,8 @@ def mla_forward(
     cache=None,
     block_tables: Optional[jax.Array] = None,
     advance: Optional[jax.Array] = None,
+    attn_kernel: str = "gather",
+    active: Optional[jax.Array] = None,
     chunk_q: Optional[int] = None,
     chunk_k: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[KVCache]]:
@@ -403,18 +451,6 @@ def mla_forward(
             new_cache = KVCache(cc, cr, _advance_by(idx, S, advance))
     else:
         # Absorbed decode: attention in the compressed latent space.
-        if isinstance(cache, PagedKVCache):
-            if block_tables is None:
-                raise ValueError("paged decode needs block_tables")
-            new_cache, cc, cr, idx = _paged_append_and_view(
-                cache, block_tables, ckv[:, 0], kr[:, 0]
-            )
-        else:
-            idx = _slot_lengths(cache, B)  # (B,)
-            cc = _scatter_rows(cache.k, ckv, idx)
-            cr = _scatter_rows(cache.v, kr, idx)
-            new_cache = KVCache(cc, cr, idx + 1)
-        L = cc.shape[1]
         wuk = params["wuk"].reshape(m.kv_lora_rank, h, nope)
         # q_latent[b,h,r] = sum_n q_nope[b,h,n] * wuk[r,h,n]
         # bf16 operands, f32 accumulation (no f32 cache copies).
@@ -422,17 +458,44 @@ def mla_forward(
             "bhn,rhn->bhr", q_nope[:, 0], wuk,
             preferred_element_type=jnp.float32,
         )
-        s = (
-            jnp.einsum("bhr,blr->bhl", q_lat.astype(cc.dtype), cc,
-                       preferred_element_type=jnp.float32)
-            + jnp.einsum("bhr,blr->bhl", q_rope[:, 0], cr,
-                         preferred_element_type=jnp.float32)
-        ) * ((nope + rope_d) ** -0.5)
-        valid = jnp.arange(L)[None, :] <= idx[:, None]  # (B, L)
-        s = jnp.where(valid[:, None, :], s, _NEG_INF)
-        p = jax.nn.softmax(s, axis=-1)
-        ctx_lat = jnp.einsum("bhl,blr->bhr", p.astype(cc.dtype), cc,
+        cc = cr = None
+        if isinstance(cache, PagedKVCache):
+            if block_tables is None:
+                raise ValueError("paged decode needs block_tables")
+            new_cache, idx = _paged_append(
+                cache, block_tables, ckv[:, 0], kr[:, 0]
+            )
+            if attn_kernel != "paged":
+                cc, cr = _paged_view(new_cache, block_tables)
+        else:
+            idx = _slot_lengths(cache, B)  # (B,)
+            cc = _scatter_rows(cache.k, ckv, idx)
+            cr = _scatter_rows(cache.v, kr, idx)
+            new_cache = KVCache(cc, cr, idx + 1)
+        if cc is None:
+            # Absorbed decode straight out of the latent pool: the
+            # kernel's scores AND context stay (kv_lora + rope) wide,
+            # and only live table blocks are ever DMA'd.
+            from repro.kernels import ops as kops
+            ctx_lat = kops.paged_mla_decode_attn(
+                q_lat.astype(cache.k.dtype), q_rope[:, 0],
+                new_cache.k, new_cache.v, block_tables,
+                _paged_eff_lengths(idx, active),
+                scale=(nope + rope_d) ** -0.5,
+            )
+        else:
+            L = cc.shape[1]
+            s = (
+                jnp.einsum("bhr,blr->bhl", q_lat.astype(cc.dtype), cc,
+                           preferred_element_type=jnp.float32)
+                + jnp.einsum("bhr,blr->bhl", q_rope[:, 0], cr,
                              preferred_element_type=jnp.float32)
+            ) * ((nope + rope_d) ** -0.5)
+            valid = jnp.arange(L)[None, :] <= idx[:, None]  # (B, L)
+            s = jnp.where(valid[:, None, :], s, _NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            ctx_lat = jnp.einsum("bhl,blr->bhr", p.astype(cc.dtype), cc,
+                                 preferred_element_type=jnp.float32)
         wuv = params["wuv"].reshape(m.kv_lora_rank, h, vd)
         out = jnp.einsum("bhr,rhv->bhv", ctx_lat.astype(wuv.dtype), wuv,
                          preferred_element_type=jnp.float32)

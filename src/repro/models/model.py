@@ -89,7 +89,7 @@ def _embed(params, cfg: ArchConfig, tokens: jax.Array,
 
 
 def _backbone(params, cfg: ArchConfig, x, positions, caches, active=None,
-              block_tables=None, advance=None):
+              block_tables=None, advance=None, attn_kernel="gather"):
     if cfg.family == "ssm":
         return tfm.stack_fwd(params["stack"], x, positions, cfg, "ssm",
                              None if caches is None else caches["stack"],
@@ -109,6 +109,7 @@ def _backbone(params, cfg: ArchConfig, x, positions, caches, active=None,
             x, ndc, aux = tfm.stack_fwd(
                 params["dense_stack"], x, positions, cfg, "dense", dc,
                 active=active, block_tables=block_tables, advance=advance,
+                attn_kernel=attn_kernel,
             )
             aux_total = tfm.aux_add(aux_total, aux)
             new_caches["dense_stack"] = ndc
@@ -116,14 +117,15 @@ def _backbone(params, cfg: ArchConfig, x, positions, caches, active=None,
         x, nmc, aux = tfm.stack_fwd(params["stack"], x, positions, cfg, "moe",
                                     mc, active=active,
                                     block_tables=block_tables,
-                                    advance=advance)
+                                    advance=advance,
+                                    attn_kernel=attn_kernel)
         aux_total = tfm.aux_add(aux_total, aux)
         new_caches["stack"] = nmc
         return x, new_caches, aux_total
     sc = None if caches is None else caches["stack"]
     return tfm.stack_fwd(params["stack"], x, positions, cfg, "dense", sc,
                          active=active, block_tables=block_tables,
-                         advance=advance)
+                         advance=advance, attn_kernel=attn_kernel)
 
 
 def _normalize_backbone_caches(cfg, new_caches):
@@ -150,7 +152,7 @@ def _logits(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
 def forward(
     params, cfg: ArchConfig, batch: Dict[str, jax.Array],
     caches: Optional[Dict[str, Any]] = None,
-    *, last_only: bool = False,
+    *, last_only: bool = False, attn_kernel: str = "gather",
 ) -> Tuple[jax.Array, Optional[Dict[str, Any]], Dict[str, jax.Array]]:
     """Full-sequence forward. Returns (logits, new_caches, aux).
 
@@ -197,7 +199,8 @@ def forward(
     x, new_caches, aux = _backbone(params, cfg, x, positions, caches,
                                    active=active,
                                    block_tables=batch.get("block_tables"),
-                                   advance=advance)
+                                   advance=advance,
+                                   attn_kernel=attn_kernel)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if last_only:
         if advance is not None:
@@ -293,12 +296,15 @@ def decode_step(params, cfg: ArchConfig, last_tokens, caches):
 
 
 def serving_decode_step(params, cfg: ArchConfig, last_tokens, caches, active,
-                        block_tables=None):
+                        block_tables=None, attn_kernel="gather"):
     """Continuous-batching decode tick.
 
     last_tokens: (B, 1) or (B, K, 1); active: f32 (B,) live-slot mask.
     block_tables: int32 (B, max_blocks) when the caches are paged -- the
     host-side allocator's view of which pool blocks each slot owns.
+    ``attn_kernel`` (static) picks the paged decode-attention path:
+    'gather' materializes full pool views (the parity oracle), 'paged'
+    runs the fetch-skipping Pallas kernel straight out of the pool.
     Returns (logits, new_caches, skip_stats) with skip_stats = f32[2]
     [skipped_tile_dots, total_tile_dots] summed over the MLP GEMMs of
     this step -- the realized SparCE skip work, surfaced by the server.
@@ -306,7 +312,8 @@ def serving_decode_step(params, cfg: ArchConfig, last_tokens, caches, active,
     batch = {"tokens": last_tokens, "active": active}
     if block_tables is not None:
         batch["block_tables"] = block_tables
-    logits, new_caches, aux = forward(params, cfg, batch, caches)
+    logits, new_caches, aux = forward(params, cfg, batch, caches,
+                                      attn_kernel=attn_kernel)
     return logits, new_caches, aux["skip"]
 
 

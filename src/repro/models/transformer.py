@@ -81,6 +81,7 @@ def block_init(key, cfg: ArchConfig, kind: str):
 def block_fwd(
     params, x, positions, cfg: ArchConfig, kind: str,
     cache=None, active=None, block_tables=None, advance=None,
+    attn_kernel: str = "gather",
 ) -> Tuple[jax.Array, Any, dict]:
     """Returns (x, new_cache, aux) with aux = {'loss', 'skip'}.
 
@@ -109,7 +110,7 @@ def block_fwd(
     h, new_cache = attn_fn(
         params["attn"], rmsnorm(params["attn_norm"], x, cfg.norm_eps),
         positions, cfg, cache=cache, block_tables=block_tables,
-        advance=advance,
+        advance=advance, attn_kernel=attn_kernel, active=active,
     )
     x = x + gate(h)
     hn = rmsnorm(params["mlp_norm"], x, cfg.norm_eps)
@@ -143,6 +144,7 @@ def _maybe_remat(fn, cfg: ArchConfig):
 def stack_fwd(
     stacked, x, positions, cfg: ArchConfig, kind: str, caches=None,
     active=None, block_tables=None, advance=None,
+    attn_kernel: str = "gather",
 ):
     """Scan over layers (scan_layers=True, compact HLO for 61-81 layer
     stacks) or unrolled python loop (scan_layers=False -- used by the
@@ -156,6 +158,7 @@ def stack_fwd(
         h, new_cache, a = block_fwd(
             layer_params, h, positions, cfg, kind, cache=layer_cache,
             active=active, block_tables=block_tables, advance=advance,
+            attn_kernel=attn_kernel,
         )
         if cfg.seq_shard and h.ndim == 3 and h.shape[1] > 1:
             # Megatron-style sequence parallelism between blocks: the
@@ -249,7 +252,8 @@ def hybrid_init(key, cfg: ArchConfig):
 
 
 def hybrid_fwd(params, x, positions, cfg: ArchConfig, caches=None,
-               active=None, block_tables=None, advance=None):
+               active=None, block_tables=None, advance=None,
+               attn_kernel: str = "gather"):
     # ``advance`` is accepted for signature uniformity with stack_fwd but
     # must be None here: model.forward rejects bucketed prefill for the
     # hybrid family (the ssm sublayers would absorb padded rows), so it

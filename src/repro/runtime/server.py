@@ -84,6 +84,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import cost_model, sasa
+from repro.kernels.paged_decode_attn import decode_attn_block_counts
 from repro.core.sparse_ops import SparsityConfig
 from repro.models import model as model_lib
 from repro.runtime.paging import (
@@ -129,6 +130,14 @@ class ServeConfig:
     # masked tail positions). None = powers-of-two up to max_len; () =
     # exact-length prefill (one trace per distinct prompt length).
     prefill_buckets: Optional[Tuple[int, ...]] = None
+    # Decode-attention implementation over the paged pool: 'gather'
+    # materializes the full (B, max_blocks*block_size) per-slot view
+    # each tick then runs dense jnp attention (the parity oracle);
+    # 'paged' runs the fetch-skipping Pallas kernel straight out of the
+    # pool -- dead slots, blocks past each live length and null padding
+    # entries are never DMA'd (kernels/paged_decode_attn.py). Outputs
+    # and skip statistics are token-identical across both (tested).
+    attn_kernel: str = "gather"
     # --- live admission ---------------------------------------------------
     # Latency SLO the scheduler enforces when deciding, each engine tick,
     # whether to admit a prefill or run the decode tick. None = drain
@@ -189,6 +198,17 @@ class Server:
             serve_cfg.kv_block_size > 0
             and cfg.family in model_lib.paged_families()
         )
+        if serve_cfg.attn_kernel not in ("gather", "paged"):
+            raise ValueError(
+                f"attn_kernel must be 'gather' or 'paged', got "
+                f"{serve_cfg.attn_kernel!r}"
+            )
+        if serve_cfg.attn_kernel == "paged" and not self._paged:
+            raise ValueError(
+                "attn_kernel='paged' needs the paged KV layout (set "
+                "kv_block_size > 0; ssm/hybrid families fall back to "
+                "contiguous caches and must keep attn_kernel='gather')"
+            )
         # Prompt rows share the cache with the (constant) patch prefix.
         self._patch_rows = (
             cfg.num_patches if cfg.frontend == "patches" else 0
@@ -263,7 +283,20 @@ class Server:
             "kv_bytes_reserved_contiguous": 0.0,
             "kv_bytes_saved_frac": 0.0,
             "kv_reserved_bytes_per_token": 0.0,
+            "kv_pool_mean_occupancy": 0.0,
             "prefill_traces": 0.0,
+            # Decode-attention fetch telemetry (paged layout only): what
+            # the paged kernel skips vs the full-view gather, in pool
+            # blocks, plus the cost model's HBM-byte translation.
+            "attn_kernel_paged": float(
+                serve_cfg.attn_kernel == "paged"),
+            "attn_blocks_fetched": 0.0,
+            "attn_blocks_total": 0.0,
+            "attn_block_skip_fraction": 0.0,
+            "attn_bytes_gather": 0.0,
+            "attn_bytes_paged": 0.0,
+            "attn_bytes_saved_frac": 0.0,
+            "modeled_attn_bytes_saved": 0.0,
             # Live-queue / SLO telemetry (virtual-tick units; zeros until
             # requests complete).
             "queue_depth": 0.0,
@@ -280,6 +313,9 @@ class Server:
         }
         self._frag_sum = 0.0
         self._frag_ticks = 0
+        self._occ_sum = 0.0
+        self._attn_fetched = 0
+        self._attn_total = 0
 
     def _build_step_fns(self) -> None:
         cfg, serve_cfg = self.cfg, self.sc
@@ -292,10 +328,12 @@ class Server:
             self._decode, self._prefill = hit
             return
         if self._paged:
+            attn_kernel = serve_cfg.attn_kernel
             self._decode = jax.jit(
                 lambda p, toks, caches, active, tables:
                 model_lib.serving_decode_step(
-                    p, cfg, toks, caches, active, tables
+                    p, cfg, toks, caches, active, tables,
+                    attn_kernel=attn_kernel,
                 )
             )
         else:
@@ -720,6 +758,15 @@ class Server:
             if cap_rows:
                 self._frag_sum += 1.0 - used_rows / cap_rows
                 self._frag_ticks += 1
+            self._occ_sum += st.alloc.in_use / max(1, self._pool_usable)
+            # Attention fetch accounting in block-table units: rows each
+            # live slot attends over this tick (incl. the row this tick
+            # writes) vs the full view the gather path materializes.
+            eff = [0 if s is None else s.cache_len + 1 for s in st.slots]
+            fetched, total = decode_attn_block_counts(
+                eff, self._max_blocks, sc.kv_block_size)
+            self._attn_fetched += fetched
+            self._attn_total += total
         cur_tok = st.cur_tok
         step = np.where(
             active.astype(bool)[:, None] if cur_tok.ndim > 1
@@ -906,7 +953,37 @@ class Server:
         if self._frag_ticks:
             self.metrics["kv_internal_frag"] = (
                 self._frag_sum / self._frag_ticks)
+        if self.metrics["ticks"]:
+            self.metrics["kv_pool_mean_occupancy"] = (
+                self._occ_sum / self.metrics["ticks"])
         self.metrics["prefill_traces"] = float(self.prefill_trace_count())
+        self._account_attn_bytes(row_b)
+
+    def _account_attn_bytes(self, row_bytes: int) -> None:
+        """Decode-attention fetch model: pool blocks the paged kernel
+        DMAs vs the full view the gather path materializes, translated
+        to HBM bytes across all attention layers.
+        ``modeled_attn_bytes_saved`` is REALIZED savings -- nonzero only
+        when the paged kernel actually served the ticks; the skip
+        fraction is reported either way (it is what the kernel would
+        skip, a property of the lengths/tables alone)."""
+        self.metrics["attn_blocks_fetched"] = float(self._attn_fetched)
+        self.metrics["attn_blocks_total"] = float(self._attn_total)
+        if not self._attn_total:
+            return
+        by = cost_model.decode_attn_hbm_bytes(
+            blocks_fetched=self._attn_fetched,
+            blocks_total=self._attn_total,
+            block_size=self.sc.kv_block_size, row_bytes=row_bytes,
+        )
+        self.metrics["attn_block_skip_fraction"] = (
+            1.0 - self._attn_fetched / self._attn_total)
+        self.metrics["attn_bytes_gather"] = float(by["gather"])
+        self.metrics["attn_bytes_paged"] = float(by["paged"])
+        self.metrics["attn_bytes_saved_frac"] = float(by["saved_frac"])
+        if self.sc.attn_kernel == "paged":
+            self.metrics["modeled_attn_bytes_saved"] = float(
+                by["gather"] - by["paged"])
 
     def _account_modeled_bytes(self) -> None:
         """Explainability metric: HBM bytes the fused MLP megakernel saves

@@ -160,47 +160,9 @@ def test_relu_bwd_bitmap_kernel():
     np.testing.assert_array_equal(np.asarray(bits), np.asarray(bits2))
 
 
-# ------------------------------------------- SparCE decode-attention kernel
-@pytest.mark.parametrize("lengths", [
-    [1, 64, 200, 512], [512, 512, 512, 512], [1, 1, 1, 1], [300, 7, 450, 128],
-])
-@pytest.mark.parametrize("dtype,tol", [
-    (jnp.float32, dict(rtol=2e-4, atol=2e-4)),
-    (jnp.bfloat16, dict(rtol=3e-2, atol=3e-2)),
-])
-def test_sparce_decode_attn(lengths, dtype, tol):
-    from repro.kernels.ref import decode_attn_ref
-    from repro.kernels.sparce_decode_attn import sparce_decode_attn
-
-    key = jax.random.PRNGKey(0)
-    B, L, KV, g, D = 4, 512, 2, 2, 128
-    q = jax.random.normal(key, (B, KV, g, D)).astype(dtype)
-    k = jax.random.normal(jax.random.PRNGKey(1), (B, L, KV, D)).astype(dtype)
-    v = jax.random.normal(jax.random.PRNGKey(2), (B, L, KV, D)).astype(dtype)
-    ln = jnp.asarray(lengths, jnp.int32)
-    got = sparce_decode_attn(q, k, v, ln, block_l=128, interpret=True)
-    want = decode_attn_ref(q, k, v, ln)
-    np.testing.assert_allclose(
-        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol)
-
-
-def test_sparce_decode_attn_dead_tiles_dont_contaminate():
-    """Garbage in dead cache tiles must never reach the output (the skip
-    must be real, not a numeric accident)."""
-    from repro.kernels.ref import decode_attn_ref
-    from repro.kernels.sparce_decode_attn import sparce_decode_attn
-
-    key = jax.random.PRNGKey(3)
-    B, L, KV, g, D = 2, 512, 1, 2, 128
-    q = jax.random.normal(key, (B, KV, g, D))
-    k = jax.random.normal(jax.random.PRNGKey(4), (B, L, KV, D))
-    v = jax.random.normal(jax.random.PRNGKey(5), (B, L, KV, D))
-    ln = jnp.asarray([128, 256], jnp.int32)
-    base = sparce_decode_attn(q, k, v, ln, block_l=128, interpret=True)
-    # poison everything past the live lengths with huge values
-    mask = (jnp.arange(L)[None, :, None, None] >= ln[:, None, None, None])
-    k2 = jnp.where(mask, 1e9, k)
-    v2 = jnp.where(mask, -1e9, v)
-    poisoned = sparce_decode_attn(q, k2, v2, ln, block_l=128, interpret=True)
-    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned),
-                               rtol=1e-5, atol=1e-5)
+# ----------------------------------------------- paged decode attention
+# The contiguous-cache decode-attention prototype was retired in favour
+# of the paged-pool kernel (kernels/paged_decode_attn.py); its kernel
+# parity / fetch-elision coverage lives in tests/test_paged_attn.py and
+# the occupancy benchmark baseline in benchmarks/baselines/
+# attn_baseline.json.
