@@ -28,6 +28,13 @@ this job. Per benchmark:
     kernel must stay token/skip-identical to the full-view gather path
     (parity bit), its modeled HBM bytes must not regress, and at <= 50%
     mean pool occupancy it must model >= 50% fewer bytes than gather.
+  * serve_cache_skip prefix-cache case (engine/prefix_cache, gated
+    against benchmarks/baselines/prefix_baseline.json): the cache-on
+    engine must stay token-identical to cache-off (parity bit), the
+    prefix hit rate and modeled prefill-ticks saving must not shrink vs
+    the baseline, and the acceptance floors hold outright on the seeded
+    shared-prefix workload (>= 50% hit rate, >= 40% of modeled prefill
+    ticks saved) with the copy-on-write path exercised at least once.
 """
 from __future__ import annotations
 
@@ -40,6 +47,12 @@ MIN_SAVED_AT_50 = 0.30
 # pool occupancy it must model >= 50% fewer decode-attention HBM bytes
 # than the full-view gather path.
 MIN_ATTN_SAVED_AT_HALF_OCC = 0.50
+# Acceptance floors for prefix-cache block sharing on the seeded
+# shared-prefix workload: at least half the admissions must hit the
+# index, and hits must keep at least 40% of the modeled prefill ticks
+# off the engine's virtual clock.
+MIN_PREFIX_HIT_RATE = 0.50
+MIN_PREFIX_TICKS_SAVED_FRAC = 0.40
 
 
 def _check_mlp_case(c, b, failures):
@@ -150,6 +163,43 @@ def _check_serve_case(c, b, failures):
                 f"{c['attn_bytes']['saved_frac']:.1%} decode-attention "
                 f"bytes at {occ:.1%} mean pool occupancy (need >= "
                 f"{MIN_ATTN_SAVED_AT_HALF_OCC:.0%} at <= 50%)"
+            )
+    # Prefix-cache fields (engine/prefix_cache, gated against
+    # benchmarks/baselines/prefix_baseline.json). Hit rate and the
+    # modeled saving are deterministic functions of the seeded traffic
+    # and the shape-derived cost model; parity is covered above.
+    if "prefix" in c and "prefix" in b:
+        if c["prefix"]["hit_rate"] < b["prefix"]["hit_rate"] - 1e-6:
+            failures.append(
+                f"{c['case']}: prefix hit rate shrank "
+                f"{b['prefix']['hit_rate']:.3f} -> "
+                f"{c['prefix']['hit_rate']:.3f}"
+            )
+        if c["prefix"]["hit_rate"] < MIN_PREFIX_HIT_RATE:
+            failures.append(
+                f"{c['case']}: prefix hit rate "
+                f"{c['prefix']['hit_rate']:.1%} below the acceptance "
+                f"floor ({MIN_PREFIX_HIT_RATE:.0%})"
+            )
+        if b["prefix"]["cow_forks"] >= 1 and c["prefix"]["cow_forks"] < 1:
+            failures.append(
+                f"{c['case']}: copy-on-write fork path no longer "
+                f"exercised ({b['prefix']['cow_forks']} -> "
+                f"{c['prefix']['cow_forks']})"
+            )
+    if "prefill_saved" in c and "prefill_saved" in b:
+        got = c["prefill_saved"]["ticks_saved_frac"]
+        want = b["prefill_saved"]["ticks_saved_frac"]
+        if got < want - 1e-6:
+            failures.append(
+                f"{c['case']}: modeled prefill-ticks saving shrank "
+                f"{want:.3f} -> {got:.3f}"
+            )
+        if got < MIN_PREFIX_TICKS_SAVED_FRAC:
+            failures.append(
+                f"{c['case']}: prefix cache saves only {got:.1%} of "
+                f"modeled prefill ticks (acceptance floor "
+                f"{MIN_PREFIX_TICKS_SAVED_FRAC:.0%})"
             )
     if "blocks_skipped_frac" in c and "blocks_skipped_frac" in b:
         if c["blocks_skipped_frac"] < b["blocks_skipped_frac"] - 1e-6:

@@ -75,25 +75,25 @@ def _run_engine() -> dict:
     t0 = time.perf_counter()
     srv.generate(list(reqs))
     dt = time.perf_counter() - t0
-    m = srv.metrics
+    m = srv.metrics  # typed ServeMetrics (runtime/metrics.py)
     # Fixed-slot baseline: ceil(R/slots) waves, each decoding every slot
     # to the wave's max budget (the seed engine's schedule).
     waves = [budgets[i:i + slots] for i in range(0, len(budgets), slots)]
     dense_tokens = sum(len(w) * max(w) for w in waves)
     emit("serve_engine/mixed10x4", dt * 1e6,
-         f"decode_tokens={m['decode_tokens']};dense_schedule={dense_tokens};"
-         f"saved={1 - m['decode_tokens'] / dense_tokens:.3f};"
-         f"ticks={m['ticks']};mlp_skip={m['mlp_skip_fraction']:.3f}")
+         f"decode_tokens={m.decode_tokens};dense_schedule={dense_tokens};"
+         f"saved={1 - m.decode_tokens / dense_tokens:.3f};"
+         f"ticks={m.ticks};mlp_skip={m.mlp_skip_fraction:.3f}")
     return {
         "case": "engine/mixed10x4",
         "wall_us": dt * 1e6,
-        "decode_tokens": int(m["decode_tokens"]),
+        "decode_tokens": int(m.decode_tokens),
         "dense_schedule_tokens": int(dense_tokens),
-        "ticks": int(m["ticks"]),
-        "tile_dots": {"skipped": m["skipped_tile_dots"],
-                      "total": m["total_tile_dots"]},
-        "mlp_skip_fraction": m["mlp_skip_fraction"],
-        "modeled_hbm_bytes_saved": m["modeled_hbm_bytes_saved"],
+        "ticks": int(m.ticks),
+        "tile_dots": {"skipped": m.skipped_tile_dots,
+                      "total": m.total_tile_dots},
+        "mlp_skip_fraction": m.mlp_skip_fraction,
+        "modeled_hbm_bytes_saved": m.modeled_hbm_bytes_saved,
     }
 
 
@@ -136,7 +136,7 @@ def _run_paged_vs_contiguous() -> dict:
             kv_block_size=block, kv_pool_blocks=pool))
         done = srv.generate(traffic())
         outs[name] = {r.uid: np.asarray(r.out) for r in done}
-        mets[name] = dict(srv.metrics)
+        mets[name] = srv.metrics.as_dict()
 
     def tokens_equal(a, b):
         return all(np.array_equal(outs[a][uid], outs[b][uid])
@@ -234,7 +234,7 @@ def _run_open_loop_slo() -> dict:
     completed = srv.serve_trace(trace)
     wall = time.perf_counter() - t_wall
     done = {r.uid: np.asarray(r.out) for r in completed}
-    m = srv.metrics
+    m = srv.metrics  # typed ServeMetrics
 
     sync = Server(cfg, params, ServeConfig(batch_slots=4, max_len=64))
     sync_out = {r.uid: np.asarray(r.out) for r in sync.generate(traffic())}
@@ -242,10 +242,10 @@ def _run_open_loop_slo() -> dict:
                  for uid in sync_out)
 
     emit("serve_slo/open_loop10x4", wall * 1e6,
-         f"parity={int(parity)};ttft_p99={m['ttft_ticks_p99']:.2f};"
-         f"itl_p99={m['itl_ticks_p99']:.2f};"
-         f"viol={int(m['slo_ttft_violations'] + m['slo_itl_violations'])};"
-         f"deferred={int(m['sched_deferred'])}")
+         f"parity={int(parity)};ttft_p99={m.ttft_ticks_p99:.2f};"
+         f"itl_p99={m.itl_ticks_p99:.2f};"
+         f"viol={int(m.slo_ttft_violations + m.slo_itl_violations)};"
+         f"deferred={int(m.sched_deferred)}")
     return {
         "case": "engine/open_loop_slo",
         "parity": bool(parity),
@@ -253,21 +253,117 @@ def _run_open_loop_slo() -> dict:
         "slo": {
             "target_ttft_ticks": slo.target_ttft_ticks,
             "target_itl_ticks": slo.target_itl_ticks,
-            "ttft_ticks_p50": m["ttft_ticks_p50"],
-            "ttft_ticks_p99": m["ttft_ticks_p99"],
-            "itl_ticks_p50": m["itl_ticks_p50"],
-            "itl_ticks_p99": m["itl_ticks_p99"],
-            "ttft_violations": int(m["slo_ttft_violations"]),
-            "itl_violations": int(m["slo_itl_violations"]),
+            "ttft_ticks_p50": m.ttft_ticks_p50,
+            "ttft_ticks_p99": m.ttft_ticks_p99,
+            "itl_ticks_p50": m.itl_ticks_p50,
+            "itl_ticks_p99": m.itl_ticks_p99,
+            "ttft_violations": int(m.slo_ttft_violations),
+            "itl_violations": int(m.slo_itl_violations),
         },
         "sched": {
-            "admitted": int(m["sched_admitted"]),
-            "deferred": int(m["sched_deferred"]),
-            "forced": int(m["sched_forced"]),
-            "prefill_tick_share": m["prefill_tick_share"],
+            "admitted": int(m.sched_admitted),
+            "deferred": int(m.sched_deferred),
+            "forced": int(m.sched_forced),
+            "prefill_tick_share": m.prefill_tick_share,
         },
-        "queue_depth_peak": int(m["queue_depth_peak"]),
-        "decode_tokens": int(m["decode_tokens"]),
+        "queue_depth_peak": int(m.queue_depth_peak),
+        "decode_tokens": int(m.decode_tokens),
+    }
+
+
+def _run_prefix_cache() -> dict:
+    """Prefix-cache block sharing vs the no-cache engine on identical
+    seeded shared-prefix traffic (the acceptance workload).
+
+    13 requests over 3 distinct 1024-token system prefixes: 3 cold
+    misses, 9 tail-divergent sharers (8-15 token suffixes) and one
+    EXACT full-prefix repeat (the copy-on-write fork path). Everything
+    gated is DETERMINISTIC: seeded prompts, greedy decode, and the
+    savings figures come from the shape-derived cost model's modeled
+    prefill ticks -- wall times ride along un-gated. ``parity`` asserts
+    the tentpole invariant inside the benchmark (token streams identical
+    cache-on vs cache-off); the acceptance floors (hit rate >= 50%,
+    modeled prefill ticks saved >= 40%) are enforced by
+    check_bench_regression.py against the committed baseline.
+    """
+    import time
+
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.runtime.server import Request, ServeConfig, Server
+
+    cfg = get_config("smollm-135m").reduced()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    P = 1024  # shared-prefix length: 64 full blocks of 16 rows
+
+    def traffic():
+        rng = np.random.default_rng(3)
+        prefixes = [rng.integers(0, cfg.vocab_size, P) for _ in range(3)]
+        reqs = []
+        for uid in range(12):
+            # uids 0-2 are the cold misses (first user of each prefix);
+            # 3-11 re-arrive on the same prefixes with fresh tails.
+            pre = prefixes[uid % 3]
+            tail = rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(8, 16)))
+            reqs.append(Request(
+                uid=uid, prompt=np.concatenate([pre, tail]),
+                max_new=int(rng.integers(4, 9))))
+        # Exact full-prefix repeat: every block (incl. the one holding
+        # the last prompt row) is cached -> copy-on-write fork.
+        reqs.append(Request(uid=12, prompt=prefixes[0].copy(), max_new=4))
+        return reqs
+
+    outs, walls = {}, {}
+    mets: dict = {}
+    for name, on in (("off", False), ("on", True)):
+        srv = Server(cfg, params, ServeConfig(
+            batch_slots=4, max_len=1280, kv_block_size=16,
+            prefix_cache=on))
+        t0 = time.perf_counter()
+        done = srv.generate(traffic())
+        walls[name] = time.perf_counter() - t0
+        outs[name] = {r.uid: np.asarray(r.out) for r in done}
+        mets[name] = srv.metrics
+
+    parity = all(np.array_equal(outs["on"][uid], outs["off"][uid])
+                 for uid in outs["off"])
+    m = mets["on"]  # typed ServeMetrics
+    emit("serve_prefix/shared3x1024", walls["on"] * 1e6,
+         f"parity={int(parity)};hit_rate={m.prefix_hit_rate:.3f};"
+         f"ticks_saved={m.prefill_ticks_saved_frac:.3f};"
+         f"cow={int(m.prefix_cow_forks)};"
+         f"blocks_shared={int(m.prefix_blocks_shared)}")
+    return {
+        "case": "engine/prefix_cache",
+        "parity": bool(parity),
+        "kv_block_size": 16,
+        "prefix_len": P,
+        "prefix": {
+            "lookups": int(m.prefix_lookups),
+            "hits": int(m.prefix_hits),
+            "hit_rate": m.prefix_hit_rate,
+            "matched_tokens": int(m.prefix_matched_tokens),
+            "blocks_shared": int(m.prefix_blocks_shared),
+            "cow_forks": int(m.prefix_cow_forks),
+            "evicted_blocks": int(m.prefix_evicted_blocks),
+            "cache_blocks": int(m.prefix_cache_blocks),
+        },
+        "prefill_saved": {
+            "ticks_nocache": m.prefill_ticks_nocache,
+            "ticks_saved": m.prefill_ticks_saved,
+            "ticks_saved_frac": m.prefill_ticks_saved_frac,
+            "flops_saved": m.prefill_flops_saved,
+        },
+        "prefill_tokens": {
+            "cache_on": int(m.prefill_tokens),
+            "cache_off": int(mets["off"].prefill_tokens),
+        },
+        "decode_tokens": int(m.decode_tokens),
+        "wall_us": {
+            "generate_on": walls["on"] * 1e6,
+            "generate_off": walls["off"] * 1e6,
+        },
     }
 
 
@@ -309,7 +405,7 @@ def _run_decode_attn_engine(arch: str, case: str) -> dict:
             attn_kernel=kernel))
         done = srv.generate(traffic())
         outs[kernel] = {r.uid: np.asarray(r.out) for r in done}
-        mets[kernel] = dict(srv.metrics)
+        mets[kernel] = srv.metrics.as_dict()
 
     parity = (
         all(np.array_equal(outs["paged"][uid], outs["gather"][uid])
@@ -400,7 +496,8 @@ def _run_decode_attn_kernel_sweep() -> list:
 
 def run(json_path: Optional[str] = None,
         attn_json_path: Optional[str] = None) -> dict:
-    cases = [_run_engine(), _run_paged_vs_contiguous(), _run_open_loop_slo()]
+    cases = [_run_engine(), _run_paged_vs_contiguous(), _run_open_loop_slo(),
+             _run_prefix_cache()]
     # decode_attn cases live in their own artifact (BENCH_attn.json,
     # gated vs benchmarks/baselines/attn_baseline.json) so the attention
     # trajectory is tracked separately from the engine/KV one.

@@ -28,6 +28,18 @@ serve_launch.main([
     "--kv-block-size", "8", "--kv-pool-blocks", "12",
 ])
 
+print("\n== prefix cache: shared-prefix requests reuse pool blocks ==")
+# Every request carries the same 32-token system-prompt prefix: the
+# first admission prefills and registers it, the rest map the cached
+# blocks read-only and prefill only their divergent tail (watch the
+# "prefix cache" hit-rate and "prefix savings" lines).
+serve_launch.main([
+    "--arch", "smollm-135m", "--reduced",
+    "--requests", "6", "--prompt-len", "8", "--max-new", "4",
+    "--batch-slots", "4", "--mixed", "--max-len", "64",
+    "--kv-block-size", "16", "--prefix-cache", "--shared-prefix-len", "32",
+])
+
 print("\n== open loop: live queue + SLO-aware prefill scheduling ==")
 serve_launch.main([
     "--arch", "smollm-135m", "--reduced",

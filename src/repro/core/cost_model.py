@@ -309,6 +309,13 @@ class TickCosts:
         modeled cost can never let the scheduler admit for free)."""
         return max(self.prefill_s(rows) / self.decode_tick_s, 1e-3)
 
+    def prefill_flops(self, rows: int) -> float:
+        """Modeled FLOPs of a batch=1 prefill over ``rows`` positions
+        (the standard ``2 * N * rows`` inference count). The prefix
+        cache reports its savings in this unit: FLOPs of the rows a
+        cache hit kept out of the prefill GEMMs entirely."""
+        return 2.0 * float(self.n_params) * float(max(rows, 0))
+
 
 def forward_roofline_s(
     n_params: int, tokens: int, *, dtype_bytes: int = 2, chips: int = 1,

@@ -3,7 +3,8 @@
     python -m repro.launch.serve --arch smollm-135m --requests 16 \
         [--reduced] [--max-new 32] [--mixed] [--sparce] [--eos-id N] \
         [--kv-block-size 16] [--kv-pool-blocks N] [--prefill-buckets 8,16,32] \
-        [--attn-kernel gather|paged] [--open-loop] [--arrival-rate 8] \
+        [--attn-kernel gather|paged] [--prefix-cache] \
+        [--shared-prefix-len N] [--open-loop] [--arrival-rate 8] \
         [--slo-ttft-ticks 64] [--slo-itl-ticks 8]
 
 --mixed draws per-request prompt lengths and decode budgets from a range
@@ -43,6 +44,15 @@ the PSRU's skip-before-fetch), instead of materializing the full
 statistics are identical to the default gather path (CI-gated); metrics
 gain the realized block-skip fraction and modeled attention HBM bytes
 saved.
+
+Prefix caching: --prefix-cache chain-hashes every prompt's full KV
+blocks into an index after prefill; later requests sharing a prefix map
+those pool blocks read-only and prefill only their divergent suffix
+(copy-on-write forks a block when a full-prompt match must append).
+--shared-prefix-len prepends a seeded common prefix of that many tokens
+to every generated request so the flag has something to hit; telemetry
+reports hit rate, blocks shared, CoW forks and modeled prefill ticks
+saved. Token streams are identical with the cache on or off (CI-gated).
 """
 from __future__ import annotations
 
@@ -96,6 +106,15 @@ def main(argv=None):
                          "oracle), 'paged' = fetch-skipping Pallas "
                          "kernel straight out of the KV pool (needs "
                          "--kv-block-size > 0)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share identical prompt prefixes across requests "
+                         "as read-only KV pool blocks (chain-hashed "
+                         "index, copy-on-write on append; needs "
+                         "--kv-block-size > 0)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="prepend a seeded common prefix of N tokens to "
+                         "every request (a shared system prompt), the "
+                         "workload --prefix-cache accelerates")
     ap.add_argument("--open-loop", action="store_true",
                     help="serve via AsyncServer: a background engine "
                          "thread drains the live queue while requests "
@@ -160,9 +179,21 @@ def main(argv=None):
         seed=args.seed, sparsity=sparsity,
         kv_block_size=args.kv_block_size,
         kv_pool_blocks=args.kv_pool_blocks,
-        prefill_buckets=buckets, attn_kernel=args.attn_kernel, slo=slo)
+        prefill_buckets=buckets, attn_kernel=args.attn_kernel,
+        prefix_cache=args.prefix_cache, slo=slo)
 
     rng = np.random.default_rng(args.seed)
+    shared_prefix = None
+    if args.shared_prefix_len > 0:
+        # One seeded "system prompt" shared by every request -- the
+        # workload shape prefix caching is built for.
+        if cfg.frontend == "codes":
+            shared_prefix = rng.integers(
+                0, cfg.vocab_size,
+                (cfg.num_codebooks, args.shared_prefix_len))
+        else:
+            shared_prefix = rng.integers(
+                0, cfg.vocab_size, args.shared_prefix_len)
     reqs = []
     for i in range(args.requests):
         plen = args.prompt_len
@@ -176,6 +207,8 @@ def main(argv=None):
             prompt = rng.integers(0, cfg.vocab_size, (cfg.num_codebooks, plen))
         else:
             prompt = rng.integers(0, cfg.vocab_size, plen)
+        if shared_prefix is not None:
+            prompt = np.concatenate([shared_prefix, prompt], axis=-1)
         reqs.append(Request(uid=i, prompt=prompt, max_new=max_new))
 
     if args.open_loop:
@@ -200,54 +233,68 @@ def main(argv=None):
         done = srv.generate(reqs)
         dt = time.perf_counter() - t0
         m = srv.metrics
-    tok = m["decode_tokens"]
+    # m is the typed ServeMetrics surface (repro/runtime/metrics.py):
+    # attribute reads fail loudly on a typo instead of defaulting to 0.
+    tok = m.decode_tokens
     print(f"served {len(done)} requests, {tok} decode tokens in "
-          f"{m['ticks']} ticks, {dt:.2f}s ({tok / max(dt, 1e-9):.1f} tok/s)")
-    occ = tok / max(1, m["ticks"] * args.batch_slots)
-    print(f"  slot occupancy {occ:.2f}, prefill {m['prefill_tokens']} tok "
-          f"/ {m['prefill_s']:.2f}s, decode {m['decode_s']:.2f}s")
-    if m["total_tile_dots"]:
-        print(f"  SparCE mlp_skip_fraction={m['mlp_skip_fraction']:.3f} "
-              f"({m['skipped_tile_dots']:.0f}/{m['total_tile_dots']:.0f} "
+          f"{m.ticks} ticks, {dt:.2f}s ({tok / max(dt, 1e-9):.1f} tok/s)")
+    occ = tok / max(1, m.ticks * args.batch_slots)
+    print(f"  slot occupancy {occ:.2f}, prefill {m.prefill_tokens} tok "
+          f"/ {m.prefill_s:.2f}s, decode {m.decode_s:.2f}s")
+    if m.total_tile_dots:
+        print(f"  SparCE mlp_skip_fraction={m.mlp_skip_fraction:.3f} "
+              f"({m.skipped_tile_dots:.0f}/{m.total_tile_dots:.0f} "
               f"tile-dots)")
-    if m["kv_paged"]:
-        print(f"  paged KV: {int(m['kv_pool_blocks'])} blocks x "
-              f"{int(m['kv_block_size'])} rows, peak in use "
-              f"{int(m['kv_blocks_peak_in_use'])} "
-              f"(occupancy {m['kv_pool_peak_occupancy']:.2f}, internal "
-              f"frag {m['kv_internal_frag']:.2f})")
-        sf = m["kv_bytes_saved_frac"]
+    if m.kv_paged:
+        print(f"  paged KV: {int(m.kv_pool_blocks)} blocks x "
+              f"{int(m.kv_block_size)} rows, peak in use "
+              f"{int(m.kv_blocks_peak_in_use)} "
+              f"(occupancy {m.kv_pool_peak_occupancy:.2f}, internal "
+              f"frag {m.kv_internal_frag:.2f})")
+        sf = m.kv_bytes_saved_frac
         # A worst-case-sized pool can exceed the contiguous figure by the
         # last block's rounding; call that what it is rather than
         # printing a negative saving.
         saved = (f"{sf:.1%} saved" if sf >= 0
                  else f"{-sf:.1%} block-rounding overhead; undersize with "
                       "--kv-pool-blocks to share HBM")
-        print(f"  KV reserved {m['kv_bytes_reserved']/1e6:.2f} MB paged vs "
-              f"{m['kv_bytes_reserved_contiguous']/1e6:.2f} MB contiguous "
+        print(f"  KV reserved {m.kv_bytes_reserved/1e6:.2f} MB paged vs "
+              f"{m.kv_bytes_reserved_contiguous/1e6:.2f} MB contiguous "
               f"({saved}, "
-              f"{m['kv_reserved_bytes_per_token']/1e3:.1f} KB/token); "
-              f"{int(m['prefill_traces'])} prefill traces")
-        if m["attn_blocks_total"]:
-            realized = ("saved" if m["attn_kernel_paged"]
+              f"{m.kv_reserved_bytes_per_token/1e3:.1f} KB/token); "
+              f"{int(m.prefill_traces)} prefill traces")
+        if m.attn_blocks_total:
+            realized = ("saved" if m.attn_kernel_paged
                         else "skippable (run --attn-kernel paged)")
-            print(f"  decode attn: {int(m['attn_blocks_fetched'])}/"
-                  f"{int(m['attn_blocks_total'])} pool-block fetches "
-                  f"(skip {m['attn_block_skip_fraction']:.1%}); "
-                  f"{(m['attn_bytes_gather'] - m['attn_bytes_paged'])/1e6:.2f}"
+            print(f"  decode attn: {int(m.attn_blocks_fetched)}/"
+                  f"{int(m.attn_blocks_total)} pool-block fetches "
+                  f"(skip {m.attn_block_skip_fraction:.1%}); "
+                  f"{(m.attn_bytes_gather - m.attn_bytes_paged)/1e6:.2f}"
                   f" MB HBM {realized} vs full-view gather")
+    if m.prefix_cache_enabled:
+        print(f"  prefix cache: {int(m.prefix_hits)}/"
+              f"{int(m.prefix_lookups)} admissions hit "
+              f"(rate {m.prefix_hit_rate:.1%}), "
+              f"{int(m.prefix_matched_tokens)} prompt tokens served from "
+              f"cache, {int(m.prefix_blocks_shared)} blocks shared, "
+              f"{int(m.prefix_cow_forks)} CoW forks, "
+              f"{int(m.prefix_evicted_blocks)} evicted")
+        print(f"  prefix savings (modeled): "
+              f"{m.prefill_ticks_saved:.2f}/{m.prefill_ticks_nocache:.2f} "
+              f"prefill ticks ({m.prefill_ticks_saved_frac:.1%}), "
+              f"{m.prefill_flops_saved/1e9:.2f} GFLOP of prefill skipped")
     if args.open_loop or slo is not None:
-        print(f"  queue: depth peak {int(m['queue_depth_peak'])}, "
-              f"admission {int(m['sched_admitted'])} admitted / "
-              f"{int(m['sched_deferred'])} deferred / "
-              f"{int(m['sched_forced'])} TTFT-forced; "
-              f"prefill tick share {m['prefill_tick_share']:.2f}")
+        print(f"  queue: depth peak {int(m.queue_depth_peak)}, "
+              f"admission {int(m.sched_admitted)} admitted / "
+              f"{int(m.sched_deferred)} deferred / "
+              f"{int(m.sched_forced)} TTFT-forced; "
+              f"prefill tick share {m.prefill_tick_share:.2f}")
         print(f"  latency (virtual ticks): TTFT p50/p99 "
-              f"{m['ttft_ticks_p50']:.1f}/{m['ttft_ticks_p99']:.1f}, "
+              f"{m.ttft_ticks_p50:.1f}/{m.ttft_ticks_p99:.1f}, "
               f"ITL p50/p99 "
-              f"{m['itl_ticks_p50']:.1f}/{m['itl_ticks_p99']:.1f}; "
-              f"SLO violations ttft={int(m['slo_ttft_violations'])} "
-              f"itl={int(m['slo_itl_violations'])}")
+              f"{m.itl_ticks_p50:.1f}/{m.itl_ticks_p99:.1f}; "
+              f"SLO violations ttft={int(m.slo_ttft_violations)} "
+              f"itl={int(m.slo_itl_violations)}")
     for r in done[:3]:
         s = r.stats
         print(f"  req {r.uid}: ttft={s['ttft_s']*1e3:.1f}ms "

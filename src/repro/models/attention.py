@@ -250,6 +250,7 @@ def gqa_forward(
     advance: Optional[jax.Array] = None,
     attn_kernel: str = "gather",
     active: Optional[jax.Array] = None,
+    continuation: bool = False,
     chunk_q: Optional[int] = None,
     chunk_k: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[KVCache]]:
@@ -260,6 +261,15 @@ def gqa_forward(
     admission scatters into pool blocks). ``advance`` (int32 (B,)) is the
     bucketed-prefill true length: the cache length advances by it rather
     than by the padded S.
+
+    ``continuation`` (static, batch=1 prefill only) marks a SUFFIX
+    prefill behind an already-populated cache (prefix-cache admission):
+    the fresh rows scatter at the cache length as usual, but attention
+    runs the queries over the WHOLE cache buffer with ``q_offset`` at
+    the prefix length, so suffix tokens attend over the cached prefix
+    exactly as a full prefill would. Rows past the written tail are
+    causally masked (exact-zero contributions), which is the same
+    trailing-mask invariance the bucketed prefill relies on.
 
     ``attn_kernel`` selects the paged-decode implementation (static):
     'gather' materializes the full per-slot pool view then runs dense
@@ -342,9 +352,23 @@ def gqa_forward(
         idx = _slot_lengths(cache, B)
         ck = _scatter_rows(cache.k, k, idx)
         cv = _scatter_rows(cache.v, v, idx)
-        out = _flash_chunked(
-            q, k, v, q_offset=0, chunk_q=min(chunk_q, S), chunk_k=min(chunk_k, S)
-        )
+        if continuation:
+            # Suffix prefill behind a cached prefix: attend q over the
+            # whole buffer (prefix rows + freshly scattered suffix) with
+            # the causal mask anchored at the prefix length. Batch=1 by
+            # contract -- a traced per-slot q_offset would need per-row
+            # masks instead of the shared one.
+            assert B == 1, "continuation prefill is batch=1 (admission)"
+            L = ck.shape[1]
+            out = _flash_chunked(
+                q, ck, cv, q_offset=idx[0],
+                chunk_q=min(chunk_q, S), chunk_k=min(chunk_k, L),
+            )
+        else:
+            out = _flash_chunked(
+                q, k, v, q_offset=0,
+                chunk_q=min(chunk_q, S), chunk_k=min(chunk_k, S),
+            )
         new_cache = KVCache(ck, cv, _advance_by(idx, S, advance))
 
     y = jnp.dot(out.reshape(B, S, h * hd), params["wo"])
@@ -403,10 +427,19 @@ def mla_forward(
     advance: Optional[jax.Array] = None,
     attn_kernel: str = "gather",
     active: Optional[jax.Array] = None,
+    continuation: bool = False,
     chunk_q: Optional[int] = None,
     chunk_k: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[KVCache]]:
     m = cfg.mla
+    if continuation:
+        # Prefix-cache suffix prefill needs bucketed (masked-tail)
+        # prefill to be exact, which excludes every MLA family (moe
+        # capacity routing is batch-shape dependent); the server gates
+        # prefix_cache on bucketable_families() before it gets here.
+        raise NotImplementedError(
+            "continuation prefill is not supported for MLA attention"
+        )
     B, S, d = x.shape
     dq_, dk_ = _default_chunks(S)
     chunk_q = chunk_q or dq_

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models import modules as nn
 from repro.models import transformer as tfm
+from repro.models.attention import KVCache
 from repro.models.layers import rmsnorm, rmsnorm_init
 
 
@@ -89,7 +90,8 @@ def _embed(params, cfg: ArchConfig, tokens: jax.Array,
 
 
 def _backbone(params, cfg: ArchConfig, x, positions, caches, active=None,
-              block_tables=None, advance=None, attn_kernel="gather"):
+              block_tables=None, advance=None, attn_kernel="gather",
+              continuation=False):
     if cfg.family == "ssm":
         return tfm.stack_fwd(params["stack"], x, positions, cfg, "ssm",
                              None if caches is None else caches["stack"],
@@ -125,7 +127,8 @@ def _backbone(params, cfg: ArchConfig, x, positions, caches, active=None,
     sc = None if caches is None else caches["stack"]
     return tfm.stack_fwd(params["stack"], x, positions, cfg, "dense", sc,
                          active=active, block_tables=block_tables,
-                         advance=advance, attn_kernel=attn_kernel)
+                         advance=advance, attn_kernel=attn_kernel,
+                         continuation=continuation)
 
 
 def _normalize_backbone_caches(cfg, new_caches):
@@ -153,6 +156,7 @@ def forward(
     params, cfg: ArchConfig, batch: Dict[str, jax.Array],
     caches: Optional[Dict[str, Any]] = None,
     *, last_only: bool = False, attn_kernel: str = "gather",
+    continuation: bool = False,
 ) -> Tuple[jax.Array, Optional[Dict[str, Any]], Dict[str, jax.Array]]:
     """Full-sequence forward. Returns (logits, new_caches, aux).
 
@@ -173,6 +177,11 @@ def forward(
     true row count: cache lengths advance by it instead of the padded S,
     and last_only gathers logits at advance-1 (the last REAL position)
     rather than the padded tail.
+
+    continuation=True (static) marks a prefix-cache SUFFIX prefill: the
+    caches already hold a prefix (see :func:`paged_prefix_caches`) and
+    attention runs the fresh queries over the whole buffer anchored at
+    the cache length. Bucketable families only, like ``advance``.
     """
     tokens = batch["tokens"]
     x = _embed(params, cfg, tokens, batch.get("patch_embeds"))
@@ -187,6 +196,14 @@ def forward(
     offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (B,))
     positions = offset[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     advance = batch.get("advance")
+    if continuation and cfg.family not in bucketable_families():
+        # Same exactness requirement as bucketed prefill: suffix rows are
+        # masked-tail padded, and the cached prefix must be position-
+        # causal for the continuation to be bit-identical.
+        raise ValueError(
+            f"continuation prefill is not supported for family "
+            f"{cfg.family!r}"
+        )
     if advance is not None and cfg.family not in bucketable_families():
         # Masked-tail prefill is only exact for position-causal stacks:
         # SSM/hybrid recurrences would absorb the padded rows and MoE
@@ -200,7 +217,8 @@ def forward(
                                    active=active,
                                    block_tables=batch.get("block_tables"),
                                    advance=advance,
-                                   attn_kernel=attn_kernel)
+                                   attn_kernel=attn_kernel,
+                                   continuation=continuation)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if last_only:
         if advance is not None:
@@ -385,6 +403,99 @@ def insert_slot_paged(big, small, slot, block_ids, true_len):
         return type(bp)(scat(bp.k, sp.k), scat(bp.v, sp.v), length)
 
     return {key: one_stack(big[key], small[key]) for key in big}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def insert_slot_paged_from(big, small, slot, block_ids, true_len,
+                           start_row):
+    """Suffix-aware :func:`insert_slot_paged`: scatter only rows
+    ``start_row..true_len-1`` of the small cache into the pool.
+
+    Rows below ``start_row`` are the SHARED prefix -- they are already
+    resident in the pool blocks the table names (possibly mapped by
+    other slots too), so their writes are redirected to the null block
+    instead of re-writing (and potentially corrupting) shared state.
+    Bucket-padding rows beyond the block table land in the null block as
+    well, exactly like the full-prompt insert.
+    """
+
+    def one_stack(bp, sp):
+        def scat(pool, rows):
+            # pool: (Lyr, nb, bs, *r); rows: (Lyr, 1, S, *r)
+            nb, bs = pool.shape[1], pool.shape[2]
+            S = rows.shape[2]
+            mb = block_ids.shape[0]
+            p = jnp.arange(S, dtype=jnp.int32)
+            ok = (p >= start_row) & (p < mb * bs)
+            dest = jnp.where(
+                ok,
+                block_ids[jnp.minimum(p // bs, mb - 1)] * bs + p % bs,
+                0,
+            )
+            flat = pool.reshape((pool.shape[0], nb * bs) + pool.shape[3:])
+            flat = jax.vmap(
+                lambda f, r: f.at[dest].set(r.astype(f.dtype))
+            )(flat, rows[:, 0])
+            return flat.reshape(pool.shape)
+
+        length = bp.length.at[:, slot].set(
+            jnp.asarray(true_len, jnp.int32))
+        return type(bp)(scat(bp.k, sp.k), scat(bp.v, sp.v), length)
+
+    return {key: one_stack(big[key], small[key]) for key in big}
+
+
+def paged_prefix_caches(big, block_ids, prefix_len, small_len: int):
+    """Batch=1 contiguous caches whose first ``prefix_len`` rows are
+    GATHERED from the paged pool via ``block_ids`` -- the suffix
+    prefill's starting state for prefix-cache admission.
+
+    The buffer is ``small_len`` rows (static: max rows plus the largest
+    bucket, so a bucketed suffix behind a near-full prefix never
+    overruns it); rows at/after ``prefix_len`` are exact zeros, matching
+    a freshly initialized cache, so the continuation attention's masked
+    tail contributes exact zeros just like a full prefill's padding.
+    Lengths are pinned at ``prefix_len``: ``forward`` then derives the
+    suffix positions and the scatter offset from the cache itself.
+    """
+    rows = jnp.arange(small_len, dtype=jnp.int32)
+    valid = rows < prefix_len
+
+    def one_stack(bp):
+        nb, bs = bp.k.shape[1], bp.k.shape[2]
+        mb = block_ids.shape[0]
+        src = jnp.where(
+            valid,
+            block_ids[jnp.minimum(rows // bs, mb - 1)] * bs + rows % bs,
+            0,
+        )
+
+        def gat(pool):
+            flat = pool.reshape((pool.shape[0], nb * bs) + pool.shape[3:])
+            g = flat[:, src]  # (Lyr, small_len, *r)
+            mask = valid.reshape((1, small_len) + (1,) * (g.ndim - 2))
+            return jnp.where(mask, g, jnp.zeros((), g.dtype))[:, None]
+
+        length = jnp.full((bp.k.shape[0], 1), prefix_len, jnp.int32)
+        return KVCache(gat(bp.k), gat(bp.v), length)
+
+    return {key: one_stack(big[key]) for key in big}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_pool_block(big, dst, src):
+    """Device-side copy-on-write: duplicate pool block ``src``'s rows
+    into ``dst`` across every layer of every stack (the allocator-side
+    bookkeeping is :meth:`BlockAllocator.fork`). The pool is donated."""
+
+    def one_stack(bp):
+        return type(bp)(
+            bp.k.at[:, dst].set(bp.k[:, src]),
+            bp.v.at[:, dst].set(bp.v[:, src]),
+            bp.length,
+        )
+
+    return {key: one_stack(big[key]) for key in big}
 
 
 @functools.partial(jax.jit, static_argnames=("slot",), donate_argnums=(0,))

@@ -81,7 +81,7 @@ def block_init(key, cfg: ArchConfig, kind: str):
 def block_fwd(
     params, x, positions, cfg: ArchConfig, kind: str,
     cache=None, active=None, block_tables=None, advance=None,
-    attn_kernel: str = "gather",
+    attn_kernel: str = "gather", continuation: bool = False,
 ) -> Tuple[jax.Array, Any, dict]:
     """Returns (x, new_cache, aux) with aux = {'loss', 'skip'}.
 
@@ -111,6 +111,7 @@ def block_fwd(
         params["attn"], rmsnorm(params["attn_norm"], x, cfg.norm_eps),
         positions, cfg, cache=cache, block_tables=block_tables,
         advance=advance, attn_kernel=attn_kernel, active=active,
+        continuation=continuation,
     )
     x = x + gate(h)
     hn = rmsnorm(params["mlp_norm"], x, cfg.norm_eps)
@@ -144,7 +145,7 @@ def _maybe_remat(fn, cfg: ArchConfig):
 def stack_fwd(
     stacked, x, positions, cfg: ArchConfig, kind: str, caches=None,
     active=None, block_tables=None, advance=None,
-    attn_kernel: str = "gather",
+    attn_kernel: str = "gather", continuation: bool = False,
 ):
     """Scan over layers (scan_layers=True, compact HLO for 61-81 layer
     stacks) or unrolled python loop (scan_layers=False -- used by the
@@ -158,7 +159,7 @@ def stack_fwd(
         h, new_cache, a = block_fwd(
             layer_params, h, positions, cfg, kind, cache=layer_cache,
             active=active, block_tables=block_tables, advance=advance,
-            attn_kernel=attn_kernel,
+            attn_kernel=attn_kernel, continuation=continuation,
         )
         if cfg.seq_shard and h.ndim == 3 and h.shape[1] > 1:
             # Megatron-style sequence parallelism between blocks: the

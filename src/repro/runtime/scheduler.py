@@ -67,11 +67,35 @@ class SLOConfig:
     Tick units are deliberate: they are deterministic on any host.
     ``TickCosts.tick_seconds`` converts to modeled wall time (v5e
     roofline); see docs/SERVING.md for tuning guidance.
+
+    Validation runs in ``__post_init__`` (the config is rejected at
+    construction, before any engine exists to misbehave).
     """
 
     target_ttft_ticks: float = 64.0
     target_itl_ticks: float = 8.0
     admit_headroom: float = 1.0
+
+    def __post_init__(self) -> None:
+        if not self.target_ttft_ticks > 0:
+            raise ValueError(
+                f"SLOConfig.target_ttft_ticks must be > 0, got "
+                f"{self.target_ttft_ticks}; it budgets arrival->first "
+                "token in decode ticks"
+            )
+        if not self.target_itl_ticks >= 1.0:
+            raise ValueError(
+                f"SLOConfig.target_itl_ticks must be >= 1.0, got "
+                f"{self.target_itl_ticks}; one decode tick is the floor "
+                "between consecutive tokens, so a smaller budget can "
+                "never be met"
+            )
+        if not self.admit_headroom > 0:
+            raise ValueError(
+                f"SLOConfig.admit_headroom must be > 0, got "
+                f"{self.admit_headroom}; it scales the TTFT budget of "
+                "the forced-admit clause"
+            )
 
 
 class Scheduler:
@@ -109,7 +133,14 @@ class Scheduler:
         """Admit the queue head now, or defer to the decode tick?
 
         ``wait_ticks``: virtual ticks the head has already queued.
-        ``prefill_ticks``: modeled cost of its (bucketed) prefill.
+        ``prefill_ticks``: modeled cost of its (bucketed) prefill. With
+        the prefix cache on, the engine passes the SUFFIX bucket's cost
+        here (the cached prefix rows never run), so a prefix hit
+        shrinks the admission cost and the same clauses below admit
+        more aggressively without any policy change -- cache-aware
+        admission falls out of pricing the work that actually runs.
+        The worst-case block reservation shrinks the same way on the
+        allocator side (shared blocks need no commitment).
         ``n_active``: live slots that a prefill would stall.
         """
         if self.slo is None:  # drain mode: the PR 1-3 greedy policy

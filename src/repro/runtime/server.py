@@ -54,6 +54,18 @@ the savings the skip earns are not given back as stranded cache rows.
 ``kv_block_size=0`` restores the contiguous per-slot layout; outputs and
 skip statistics are token-identical across both (tested).
 
+Prefix-cache block sharing (``ServeConfig.prefix_cache``): after every
+prefill, the prompt's FULL blocks are chain-hashed into a
+:class:`~repro.runtime.paging.PrefixCache`; a later admission whose
+prompt shares a cached prefix maps those pool blocks into its table
+READ-ONLY (one allocator ref each), prefills only the divergent suffix
+(``_prefill_suffix``: prefix gathered from the pool, suffix run with
+``continuation=True``), and copy-on-write forks the last block when the
+FULL prompt matched and must take the re-run last row. The scheduler
+prices a hit at the suffix bucket and the allocator commitment shrinks
+by the shared blocks, so hits admit earlier AND cheaper -- while token
+outputs stay bit-identical to the no-cache engine (tested).
+
 Thread-safety: ``Server`` itself is single-threaded -- exactly one
 thread may call ``start_engine``/``step``/``generate``. The safe
 cross-thread surfaces are the queue (``enqueue`` via ``AsyncServer``'s
@@ -87,8 +99,10 @@ from repro.core import cost_model, sasa
 from repro.kernels.paged_decode_attn import decode_attn_block_counts
 from repro.core.sparse_ops import SparsityConfig
 from repro.models import model as model_lib
+from repro.runtime.metrics import ServeMetrics
 from repro.runtime.paging import (
-    BlockAllocator, blocks_needed, pick_bucket, resolve_buckets,
+    BlockAllocator, PrefixCache, blocks_needed, pick_bucket,
+    resolve_buckets,
 )
 from repro.runtime.queueing import QueuedRequest, RequestQueue
 from repro.runtime.scheduler import Scheduler, SLOConfig
@@ -108,6 +122,12 @@ class Request:
 
 @dataclasses.dataclass
 class ServeConfig:
+    """Engine configuration. Field-level validation runs in
+    ``__post_init__`` (bad configs are rejected at construction with
+    actionable messages); checks that need the model family -- paged
+    fallback, prefix-cache bucketability -- run in ``Server.__init__``,
+    and per-request feasibility in ``Server._validate``."""
+
     batch_slots: int = 8
     max_len: int = 512
     temperature: float = 0.0  # 0 => greedy
@@ -138,12 +158,57 @@ class ServeConfig:
     # entries are never DMA'd (kernels/paged_decode_attn.py). Outputs
     # and skip statistics are token-identical across both (tested).
     attn_kernel: str = "gather"
+    # Prefix-cache block sharing: full prompt blocks are chain-hashed
+    # into an index after prefill; a later admission maps the longest
+    # cached prefix's pool blocks into its table READ-ONLY, prefills
+    # only the divergent suffix, and copy-on-write forks a block when a
+    # full-prompt match must append. Needs the paged layout (like
+    # attn_kernel='paged') and a bucketable, patch-free family --
+    # outputs stay token-identical to the no-cache engine (tested).
+    prefix_cache: bool = False
     # --- live admission ---------------------------------------------------
     # Latency SLO the scheduler enforces when deciding, each engine tick,
     # whether to admit a prefill or run the decode tick. None = drain
     # mode: admit greedily whenever a slot + blocks are free (the PR 1-3
     # schedule; what Server.generate parity tests pin).
     slo: Optional[SLOConfig] = None
+
+    def __post_init__(self) -> None:
+        if self.batch_slots < 1:
+            raise ValueError(
+                f"ServeConfig.batch_slots must be >= 1, got "
+                f"{self.batch_slots}"
+            )
+        if self.max_len < 1:
+            raise ValueError(
+                f"ServeConfig.max_len must be >= 1, got {self.max_len}"
+            )
+        if self.kv_block_size < 0:
+            raise ValueError(
+                f"ServeConfig.kv_block_size must be >= 0 (0 = contiguous "
+                f"layout), got {self.kv_block_size}"
+            )
+        if self.kv_pool_blocks is not None and self.kv_pool_blocks < 1:
+            raise ValueError(
+                f"ServeConfig.kv_pool_blocks must be >= 1 (or None for "
+                f"the worst-case pool), got {self.kv_pool_blocks}"
+            )
+        if self.attn_kernel not in ("gather", "paged"):
+            raise ValueError(
+                f"ServeConfig.attn_kernel must be 'gather' or 'paged', "
+                f"got {self.attn_kernel!r}"
+            )
+        if self.attn_kernel == "paged" and self.kv_block_size <= 0:
+            raise ValueError(
+                "ServeConfig.attn_kernel='paged' needs the paged KV "
+                "layout: set kv_block_size > 0"
+            )
+        if self.prefix_cache and self.kv_block_size <= 0:
+            raise ValueError(
+                "ServeConfig.prefix_cache=True needs the paged KV "
+                "layout: shared prefixes are pool blocks mapped into "
+                "several tables, so set kv_block_size > 0"
+            )
 
 
 @dataclasses.dataclass
@@ -156,6 +221,11 @@ class _Slot:
     ticks: int = 0
     cache_len: int = 0  # rows currently in this slot's cache
     blocks: List[int] = dataclasses.field(default_factory=list)
+    # Prefix-cache blocks mapped READ-ONLY into this slot's table (one
+    # allocator ref each, released with the slot). Owned blocks in
+    # ``blocks`` always sit AFTER the shared run in the table, so decode
+    # writes (cache_len grows from the prompt end) never touch these.
+    shared: List[int] = dataclasses.field(default_factory=list)
     commit: int = 0  # worst-case pool blocks promised to this request
     admit_vt: float = 0.0  # virtual time when prefill started
     first_vt: float = 0.0  # virtual time of the first token
@@ -198,11 +268,8 @@ class Server:
             serve_cfg.kv_block_size > 0
             and cfg.family in model_lib.paged_families()
         )
-        if serve_cfg.attn_kernel not in ("gather", "paged"):
-            raise ValueError(
-                f"attn_kernel must be 'gather' or 'paged', got "
-                f"{serve_cfg.attn_kernel!r}"
-            )
+        # Value-level checks live in ServeConfig.__post_init__; the
+        # family-coupled ones (paged fallback, bucketability) stay here.
         if serve_cfg.attn_kernel == "paged" and not self._paged:
             raise ValueError(
                 "attn_kernel='paged' needs the paged KV layout (set "
@@ -213,6 +280,21 @@ class Server:
         self._patch_rows = (
             cfg.num_patches if cfg.frontend == "patches" else 0
         )
+        if serve_cfg.prefix_cache:
+            if not self._paged:
+                raise ValueError(
+                    "prefix_cache=True needs the paged KV layout (set "
+                    "kv_block_size > 0; ssm/hybrid families have no "
+                    "per-token rows to share)"
+                )
+            if (cfg.family not in model_lib.bucketable_families()
+                    or self._patch_rows):
+                raise ValueError(
+                    f"prefix_cache=True is not supported for family "
+                    f"{cfg.family!r}: suffix-only prefill needs bucketed "
+                    "(masked-tail) prefill to be exact and a token-only "
+                    "cache prefix (patch rows are per-request)"
+                )
         self._max_rows = serve_cfg.max_len + self._patch_rows
         if self._paged:
             self._max_blocks = blocks_needed(
@@ -230,6 +312,12 @@ class Server:
                 serve_cfg.prefill_buckets, serve_cfg.max_len)
         else:
             self._buckets = ()
+        # Suffix-prefill scratch buffer: a bucketed suffix scattered
+        # behind a near-full prefix can reach prefix + bucket rows, so
+        # the continuation cache is statically oversized by the largest
+        # bucket (rows past max_rows land in the null block on insert).
+        self._ext_rows = self._max_rows + (
+            max(self._buckets) if self._buckets else self._max_rows)
         # Step fns memoised per sparsity bucket: re-entering a bucket the
         # engine has already planned for reuses its jitted fns (and their
         # trace caches) instead of recompiling -- an EMA hovering at a
@@ -261,56 +349,23 @@ class Server:
         self._itl_ticks_all: deque = deque(maxlen=500_000)
         self.admitted_uids: deque = deque(maxlen=100_000)  # admission order
         self._st: Optional[_EngineState] = None
+        # Per-run prefix index (built in start_engine when enabled): maps
+        # chain-hashed full prompt blocks to pool block ids.
+        self._prefix: Optional[PrefixCache] = None
         # AsyncServer hooks; called on the engine thread.
         self.on_token: Optional[Callable[[Request, np.ndarray], None]] = None
         self.on_finish: Optional[Callable[[Request], None]] = None
-        self.metrics: Dict[str, float] = {
-            "prefill_tokens": 0, "decode_tokens": 0, "ticks": 0,
-            "admitted": 0, "completed": 0,
-            "skipped_tile_dots": 0.0, "total_tile_dots": 0.0,
-            "mlp_skip_fraction": 0.0,
-            "prefill_s": 0.0, "decode_s": 0.0,
-            "replans": 0, "modeled_hbm_bytes_saved": 0.0,
-            # Paged-KV pool telemetry (zeros in contiguous mode).
-            "kv_paged": float(self._paged),
-            "kv_block_size": float(serve_cfg.kv_block_size if self._paged
-                                   else 0),
-            "kv_pool_blocks": float(self._pool_usable),
-            "kv_blocks_peak_in_use": 0.0,
-            "kv_pool_peak_occupancy": 0.0,
-            "kv_internal_frag": 0.0,
-            "kv_bytes_reserved": 0.0,
-            "kv_bytes_reserved_contiguous": 0.0,
-            "kv_bytes_saved_frac": 0.0,
-            "kv_reserved_bytes_per_token": 0.0,
-            "kv_pool_mean_occupancy": 0.0,
-            "prefill_traces": 0.0,
-            # Decode-attention fetch telemetry (paged layout only): what
-            # the paged kernel skips vs the full-view gather, in pool
-            # blocks, plus the cost model's HBM-byte translation.
-            "attn_kernel_paged": float(
-                serve_cfg.attn_kernel == "paged"),
-            "attn_blocks_fetched": 0.0,
-            "attn_blocks_total": 0.0,
-            "attn_block_skip_fraction": 0.0,
-            "attn_bytes_gather": 0.0,
-            "attn_bytes_paged": 0.0,
-            "attn_bytes_saved_frac": 0.0,
-            "modeled_attn_bytes_saved": 0.0,
-            # Live-queue / SLO telemetry (virtual-tick units; zeros until
-            # requests complete).
-            "queue_depth": 0.0,
-            "queue_depth_peak": 0.0,
-            "ttft_ticks_p50": 0.0, "ttft_ticks_p95": 0.0,
-            "ttft_ticks_p99": 0.0,
-            "itl_ticks_p50": 0.0, "itl_ticks_p95": 0.0,
-            "itl_ticks_p99": 0.0,
-            "ttft_s_p50": 0.0, "ttft_s_p99": 0.0,
-            "slo_ttft_violations": 0.0, "slo_itl_violations": 0.0,
-            "sched_admitted": 0.0, "sched_deferred": 0.0,
-            "sched_forced": 0.0,
-            "prefill_tick_share": 0.0, "decode_tick_share": 0.0,
-        }
+        # Typed metrics surface (runtime/metrics.py): every counter is a
+        # documented dataclass field; the few config-derived ones are
+        # stamped here, everything else starts at 0.0.
+        self.metrics = ServeMetrics(
+            kv_paged=float(self._paged),
+            kv_block_size=float(
+                serve_cfg.kv_block_size if self._paged else 0),
+            kv_pool_blocks=float(self._pool_usable),
+            attn_kernel_paged=float(serve_cfg.attn_kernel == "paged"),
+            prefix_cache_enabled=float(serve_cfg.prefix_cache),
+        )
         self._frag_sum = 0.0
         self._frag_ticks = 0
         self._occ_sum = 0.0
@@ -325,7 +380,7 @@ class Server:
         )
         hit = self._step_fn_cache.get(key)
         if hit is not None:
-            self._decode, self._prefill = hit
+            self._decode, self._prefill, self._prefill_cached = hit
             return
         if self._paged:
             attn_kernel = serve_cfg.attn_kernel
@@ -362,7 +417,32 @@ class Server:
             return logits, new_caches, aux["skip"]
 
         self._prefill = jax.jit(_prefill_fn)
-        self._step_fn_cache[key] = (self._decode, self._prefill)
+
+        if paged and serve_cfg.prefix_cache:
+            ext_rows = self._ext_rows
+
+            def _prefill_cached_fn(p, batch, pool, block_ids, prefix_len):
+                # Suffix-only continuation prefill: gather the matched
+                # prefix rows out of the POOL into a batch=1 scratch
+                # cache pinned at length=prefix_len, then run only the
+                # (bucketed) suffix with continuation=True so its
+                # queries attend over prefix + suffix. The scratch is
+                # statically oversized (_ext_rows) so the suffix scatter
+                # never clamps; the all-masked tail is an exact no-op in
+                # the online softmax.
+                small = model_lib.paged_prefix_caches(
+                    pool, block_ids, prefix_len, ext_rows)
+                logits, new_caches, aux = model_lib.forward(
+                    p, cfg, batch, small, last_only=True,
+                    continuation=True,
+                )
+                return logits, new_caches, aux["skip"]
+
+            self._prefill_cached = jax.jit(_prefill_cached_fn)
+        else:
+            self._prefill_cached = None
+        self._step_fn_cache[key] = (
+            self._decode, self._prefill, self._prefill_cached)
 
     def _maybe_replan(self) -> None:
         """Re-bucket the measured sparsity into the MLP planner input.
@@ -382,7 +462,7 @@ class Server:
                 sparsity=dataclasses.replace(sp, expected_sparsity=bucket),
             )
             self._build_step_fns()
-            self.metrics["replans"] += 1
+            self.metrics.replans += 1
 
     # ------------------------------------------------------------ sampling
     def _sample(self, logits: np.ndarray) -> np.ndarray:
@@ -458,13 +538,73 @@ class Server:
             )
         else:
             caches = model_lib.insert_slot_caches(caches, small, slot)
-        self.metrics["prefill_s"] += time.perf_counter() - t0
-        self.metrics["prefill_tokens"] += S
-        self.metrics["admitted"] += 1
-        skip = np.asarray(skip, np.float64)
-        self.metrics["skipped_tile_dots"] += float(skip[0])
-        self.metrics["total_tile_dots"] += float(skip[1])
+        self.metrics.prefill_s += time.perf_counter() - t0
+        self.metrics.prefill_tokens += S
+        self.metrics.admitted += 1
+        self._count_prefill_skip(skip)
         # last_only logits: (1, 1, V) or (1, 1, K, V) for codes.
+        last = np.asarray(logits[0, 0], np.float32)  # (V,) or (K, V)
+        return last, caches
+
+    def _count_prefill_skip(self, skip) -> None:
+        """Fold a prefill's (skipped, total) tile-dot pair into both the
+        run totals and the prefill-phase slice (the slice lets parity
+        checks compare the DECODE portion when suffix-only prefills
+        legitimately run fewer GEMMs)."""
+        skip = np.asarray(skip, np.float64)
+        self.metrics.skipped_tile_dots += float(skip[0])
+        self.metrics.total_tile_dots += float(skip[1])
+        self.metrics.prefill_skipped_tile_dots += float(skip[0])
+        self.metrics.prefill_total_tile_dots += float(skip[1])
+
+    def _prefill_suffix(self, r: Request, slot: int, caches, table_row,
+                        prefix_len: int, rows0: int):
+        """Continuation prefill: run only the divergent suffix of a
+        prompt whose leading ``prefix_len`` rows already sit in pool
+        blocks mapped (read-only) into ``table_row``.
+
+        The matched prefix is gathered out of the pool into a batch=1
+        scratch cache pinned at length ``prefix_len``; the suffix is
+        padded up to its own bucket and runs with ``continuation=True``
+        so its queries attend over prefix + suffix at the right
+        positions. The scratch is statically oversized (``_ext_rows``)
+        so the bucketed scatter never clamps -- the all-masked tail is
+        an exact no-op in the online softmax, which is what keeps the
+        result bit-for-bit the full prefill's (tested)."""
+        cfg = self.cfg
+        prompt = np.asarray(r.prompt)
+        S = int(prompt.shape[-1])
+        n_suffix = rows0 - prefix_len
+        S_pad = (pick_bucket(n_suffix, self._buckets)
+                 if self._buckets else n_suffix)
+        if cfg.frontend == "codes":
+            toks = np.zeros((1, cfg.num_codebooks, S_pad), np.int32)
+            toks[0, :, :n_suffix] = prompt.reshape(
+                cfg.num_codebooks, S)[:, prefix_len:]
+        else:
+            toks = np.zeros((1, S_pad), np.int32)
+            toks[0, :n_suffix] = prompt.reshape(S)[prefix_len:]
+        batch = {
+            "tokens": jnp.asarray(toks),
+            "advance": jnp.asarray([n_suffix], jnp.int32),
+        }
+        t0 = time.perf_counter()
+        logits, small, skip = self._prefill_cached(
+            self.params, batch, caches, jnp.asarray(table_row),
+            jnp.int32(prefix_len),
+        )
+        self._prefill_shapes.add(
+            (id(self._prefill_cached), cfg.frontend, S_pad))
+        caches = model_lib.insert_slot_paged_from(
+            caches, small, jnp.int32(slot), jnp.asarray(table_row),
+            jnp.int32(rows0), jnp.int32(prefix_len),
+        )
+        self.metrics.prefill_s += time.perf_counter() - t0
+        # Only the suffix actually prefilled; the matched rows are the
+        # prefix_matched_tokens counter's business.
+        self.metrics.prefill_tokens += n_suffix
+        self.metrics.admitted += 1
+        self._count_prefill_skip(skip)
         last = np.asarray(logits[0, 0], np.float32)  # (V,) or (K, V)
         return last, caches
 
@@ -485,7 +625,7 @@ class Server:
             "ttft_ticks": slot_state.first_vt - item.arrival_vt,
             "itl_ticks_max": slot_state.itl_max,
         }
-        self.metrics["completed"] += 1
+        self.metrics.completed += 1
 
     def _hit_eos(self, r: Request, tok: np.ndarray) -> bool:
         eos = r.eos_id if r.eos_id is not None else self.sc.eos_id
@@ -535,9 +675,15 @@ class Server:
             alloc: Optional[BlockAllocator] = BlockAllocator(
                 self._pool_usable)
             tables = np.zeros((B, self._max_blocks), np.int32)
+            # Fresh index per run: cached blocks belong to THIS pool.
+            self._prefix = (
+                PrefixCache(alloc, sc.kv_block_size)
+                if sc.prefix_cache else None
+            )
         else:
             caches = model_lib.init_caches(cfg, B, self._max_rows)
             alloc, tables = None, None
+            self._prefix = None
         if cfg.frontend == "codes":
             cur_tok = np.zeros((B, cfg.num_codebooks), np.int32)
         else:
@@ -601,7 +747,7 @@ class Server:
         self._ttft_ticks_all.append(ttft)
         self._ttft_s_all.append(s.t_first - item.arrival_s)
         if ttft > self._sched.ttft_budget(item.deadline_ticks):
-            self.metrics["slo_ttft_violations"] += 1
+            self.metrics.slo_ttft_violations += 1
 
     def _emit_token(self, r: Request, tok: np.ndarray) -> None:
         if self.on_token is not None:
@@ -622,10 +768,17 @@ class Server:
             st.completed.append(s.req)
         if self._paged:
             if s.blocks:
-                st.alloc.free(s.blocks)
+                st.alloc.release(s.blocks)
+            if s.shared:
+                # Drop this slot's refs on the read-only prefix blocks;
+                # the prefix cache's own refs (and other sharers') keep
+                # the registered blocks alive in the pool.
+                st.alloc.release(s.shared)
+                s.shared = []
             # Return the UNUSED tail of the worst-case commitment; the
             # allocator raises if this would double-count (released slot
-            # already un-reserved).
+            # already un-reserved). Shared blocks were never part of the
+            # commitment, so the ledger math is unchanged by sharing.
             st.alloc.unreserve(s.commit - len(s.blocks))
             s.commit = len(s.blocks)
             st.tables[i, :] = 0
@@ -656,17 +809,61 @@ class Server:
                 continue
             r = item.req
             rows0, worst = self._request_need(r)
+            bs = sc.kv_block_size
+            # Prefix-cache probe. lookup() RETAINS every matched block
+            # on our behalf, so each bail-out path below must release
+            # them or the pool leaks refs.
+            keys: List[bytes] = []
+            shared: List[int] = []
+            cow = False
+            if self._prefix is not None:
+                keys = PrefixCache.chain_keys(np.asarray(r.prompt), bs)
+                shared = self._prefix.lookup(keys)
+                self.metrics.prefix_lookups += 1
+                if shared:
+                    self.metrics.prefix_hits += 1
+                # Full-prompt match: the block holding the last prompt
+                # row is cached too, but that row must re-run for its
+                # logits and the slot needs a writable home for it --
+                # copy-on-write forks it into an owned block below.
+                cow = bool(shared) and len(shared) * bs == rows0
             commit = 0
             if self._paged:
-                commit = blocks_needed(worst, sc.kv_block_size)
+                # Shared blocks never need allocating, so they drop out
+                # of the worst-case commitment (the CoW fork stays in:
+                # its copy is an owned allocation).
+                n_keep = len(shared) - 1 if cow else len(shared)
+                commit = blocks_needed(worst, bs) - n_keep
                 if not st.alloc.can_reserve(commit):
-                    break  # pool full: wait for a release
+                    # Relieve our own pressure first: LRU-evict blocks
+                    # only the index holds. Our matched blocks are
+                    # refcount >= 2 (index + our retain), so eviction
+                    # can never invalidate this lookup.
+                    if self._prefix is not None:
+                        self._prefix.evict_for(commit)
+                    if not st.alloc.can_reserve(commit):
+                        if shared:
+                            st.alloc.release(shared)
+                        break  # pool full: wait for a release
             n_active = sum(1 for s in st.slots if s is not None)
-            pt = self._costs.prefill_ticks(self._bucket_rows(r))
+            pt_full = self._costs.prefill_ticks(self._bucket_rows(r))
+            n_suffix, prefix_len = rows0, 0
+            if shared:
+                n_suffix = 1 if cow else rows0 - len(shared) * bs
+                prefix_len = rows0 - n_suffix
+            suffix_rows = (pick_bucket(n_suffix, self._buckets)
+                           if self._buckets else n_suffix)
+            # A hit prices admission at the SUFFIX bucket: the scheduler
+            # sees the work that actually runs, so cache-aware admission
+            # falls out of the existing policy clauses unchanged.
+            pt = (self._costs.prefill_ticks(suffix_rows) if prefix_len
+                  else pt_full)
             if not self._sched.admit_head(
                     wait_ticks=self._vt - item.arrival_vt,
                     prefill_ticks=pt, n_active=n_active,
                     deadline_ticks=item.deadline_ticks):
+                if shared:
+                    st.alloc.release(shared)
                 break  # SLO defer: spend the gap on the decode tick
             block_ids: Optional[List[int]] = None
             if self._paged:
@@ -674,31 +871,75 @@ class Server:
                 # above; with a single engine thread they always agree,
                 # and with concurrent reservers only this one counts.
                 if not st.alloc.try_reserve(commit):
+                    if shared:
+                        st.alloc.release(shared)
                     break
-                block_ids = st.alloc.alloc(
-                    blocks_needed(rows0, sc.kv_block_size), reserved=True)
-                st.tables[i, : len(block_ids)] = block_ids
+                if cow:
+                    # CoW fork: allocator bookkeeping first (atomic), then
+                    # the device-side row copy -- it must land BEFORE the
+                    # suffix prefill gathers the prefix through the table.
+                    block_ids = [st.alloc.fork(shared[-1], reserved=True)]
+                    src = shared.pop()
+                    st.caches = model_lib.copy_pool_block(
+                        st.caches, jnp.int32(block_ids[0]), jnp.int32(src))
+                    self.metrics.prefix_cow_forks += 1
+                else:
+                    block_ids = st.alloc.alloc(
+                        blocks_needed(rows0, bs) - len(shared),
+                        reserved=True)
+                # Table layout: the read-only shared run first, owned
+                # blocks after it -- decode appends (cache_len grows from
+                # the prompt end) can only ever land in owned blocks.
+                st.tables[i, : len(shared)] = shared
+                st.tables[
+                    i, len(shared): len(shared) + len(block_ids)
+                ] = block_ids
                 # Sample the peak here too: requests that finish on
                 # their prefill token never reach a decode tick but
                 # still occupied pool blocks.
-                self.metrics["kv_blocks_peak_in_use"] = max(
-                    self.metrics["kv_blocks_peak_in_use"],
+                self.metrics.kv_blocks_peak_in_use = max(
+                    self.metrics.kv_blocks_peak_in_use,
                     float(st.alloc.in_use))
             # By identity: a concurrent submit may have pushed a new,
             # higher-priority head between our peek and now.
             self._queue.pop_expected(item)
             t0 = time.perf_counter()
             admit_vt = self._vt
-            last_logits, st.caches = self._prefill_one(
-                r, i, st.caches, block_ids)
+            if prefix_len:
+                last_logits, st.caches = self._prefill_suffix(
+                    r, i, st.caches, st.tables[i], prefix_len, rows0)
+            else:
+                last_logits, st.caches = self._prefill_one(
+                    r, i, st.caches, block_ids)
             self._vt += pt
             self._vt_prefill += pt
+            if self._prefix is not None:
+                # Run-level savings model: pt_full is what the no-cache
+                # engine would have spent on EVERY admission; saved is
+                # the slice a hit kept off the virtual clock.
+                self.metrics.prefill_ticks_nocache += pt_full
+                if prefix_len:
+                    self.metrics.prefix_matched_tokens += prefix_len
+                    self.metrics.prefix_blocks_shared += len(shared)
+                    self.metrics.prefill_ticks_saved += pt_full - pt
+                    self.metrics.prefill_flops_saved += (
+                        self._costs.prefill_flops(self._bucket_rows(r))
+                        - self._costs.prefill_flops(suffix_rows))
+                # Publish this prompt's FULL blocks. register() keeps the
+                # incumbent block for an existing key, so a CoW fork's
+                # private copy never displaces the shared original.
+                n_full = rows0 // bs
+                if n_full:
+                    self._prefix.register(
+                        keys[:n_full],
+                        [int(b) for b in st.tables[i, :n_full]])
             first = self._sample(last_logits)  # () or (K,)
             s = _Slot(
                 req=r, item=item, produced=[np.asarray(first)],
                 t_admit=t0, t_first=time.perf_counter(),
                 cache_len=rows0,
                 blocks=block_ids if block_ids is not None else [],
+                shared=shared,
                 commit=commit,
                 admit_vt=admit_vt, first_vt=self._vt,
                 last_token_vt=self._vt,
@@ -734,13 +975,16 @@ class Server:
             for i, s in enumerate(st.slots):
                 if s is None:
                     continue
+                # Owned blocks sit after the shared prefix run in the
+                # table, so a write crossing a block edge lands in a NEW
+                # owned block -- shared blocks never take decode writes.
                 blk_idx = s.cache_len // sc.kv_block_size
-                if blk_idx >= len(s.blocks):
+                if blk_idx >= len(s.shared) + len(s.blocks):
                     (new_blk,) = st.alloc.alloc(1, reserved=True)
                     s.blocks.append(new_blk)
                     st.tables[i, blk_idx] = new_blk
-            self.metrics["kv_blocks_peak_in_use"] = max(
-                self.metrics["kv_blocks_peak_in_use"],
+            self.metrics.kv_blocks_peak_in_use = max(
+                self.metrics.kv_blocks_peak_in_use,
                 float(st.alloc.in_use))
             # Commitment invariant, cheap per-tick form (two ints): the
             # allocator's atomic reservation counter must equal the
@@ -754,7 +998,14 @@ class Server:
                 )
             used_rows = sum(
                 s.cache_len + 1 for s in st.slots if s is not None)
-            cap_rows = st.alloc.in_use * sc.kv_block_size
+            # Capacity counts each slot's MAPPED blocks (a shared block
+            # once per sharer, like used_rows counts its rows), so the
+            # unused-tail fraction stays in [0, 1] under prefix sharing
+            # and index-only cached blocks don't dilute it. Identical to
+            # alloc.in_use * block_size when the cache is off.
+            cap_rows = sum(
+                (len(s.shared) + len(s.blocks)) * sc.kv_block_size
+                for s in st.slots if s is not None)
             if cap_rows:
                 self._frag_sum += 1.0 - used_rows / cap_rows
                 self._frag_ticks += 1
@@ -787,14 +1038,14 @@ class Server:
             logits, st.caches, skip = self._decode(
                 self.params, step_toks, st.caches, jnp.asarray(active)
             )
-        self.metrics["decode_s"] += time.perf_counter() - t0
-        self.metrics["ticks"] += 1
-        self.metrics["decode_tokens"] += n_active
+        self.metrics.decode_s += time.perf_counter() - t0
+        self.metrics.ticks += 1
+        self.metrics.decode_tokens += n_active
         self._vt += 1.0
         self._vt_decode += 1.0
         skip = np.asarray(skip, np.float64)
-        self.metrics["skipped_tile_dots"] += float(skip[0])
-        self.metrics["total_tile_dots"] += float(skip[1])
+        self.metrics.skipped_tile_dots += float(skip[0])
+        self.metrics.total_tile_dots += float(skip[1])
         self._ema.update(float(skip[0]), float(skip[1]))
         self._maybe_replan()
 
@@ -818,7 +1069,7 @@ class Server:
             s.itl_max = max(s.itl_max, gap)
             self._itl_ticks_all.append(gap)
             if slo is not None and gap > slo.target_itl_ticks:
-                self.metrics["slo_itl_violations"] += 1
+                self.metrics.slo_itl_violations += 1
             cur_tok[i] = tok
             self._emit_token(s.req, tok)
             if len(s.produced) >= s.req.max_new or self._hit_eos(
@@ -896,38 +1147,45 @@ class Server:
         quantity prefill bucketing bounds (probed from the jit cache,
         cross-checked against the host-side shape set)."""
         n = 0
-        for _, pre in self._step_fn_cache.values():
-            cache_size = getattr(pre, "_cache_size", None)
-            if cache_size is not None:
-                n += int(cache_size())
+        for _, pre, pre_cached in self._step_fn_cache.values():
+            for fn in (pre, pre_cached):
+                cache_size = getattr(fn, "_cache_size", None)
+                if cache_size is not None:
+                    n += int(cache_size())
         return max(n, len(self._prefill_shapes))
 
-    def finalize_metrics(self) -> Dict[str, float]:
+    def finalize_metrics(self) -> ServeMetrics:
         """Fold the run's accumulators into ``metrics`` (skip fraction,
         KV-bytes model, queue depth, latency percentiles, SLO counts,
-        tick shares). Engine thread only; returns ``metrics``."""
-        if self.metrics["total_tile_dots"] > 0:
-            self.metrics["mlp_skip_fraction"] = (
-                self.metrics["skipped_tile_dots"]
-                / self.metrics["total_tile_dots"]
-            )
+        tick shares, prefix-cache stats). Engine thread only; returns
+        the typed :class:`ServeMetrics`."""
+        m = self.metrics
+        if m.total_tile_dots > 0:
+            m.mlp_skip_fraction = m.skipped_tile_dots / m.total_tile_dots
         self._account_modeled_bytes()
         self._account_kv_bytes()
-        m = self.metrics
-        m["queue_depth"] = float(self._queue.depth())
-        m["queue_depth_peak"] = float(self._queue.depth_peak)
+        m.queue_depth = float(self._queue.depth())
+        m.queue_depth_peak = float(self._queue.depth_peak)
         for q in (50, 95, 99):
-            m[f"ttft_ticks_p{q}"] = _pct(self._ttft_ticks_all, q)
-            m[f"itl_ticks_p{q}"] = _pct(self._itl_ticks_all, q)
-        m["ttft_s_p50"] = _pct(self._ttft_s_all, 50)
-        m["ttft_s_p99"] = _pct(self._ttft_s_all, 99)
-        m["sched_admitted"] = float(self._sched.admitted)
-        m["sched_deferred"] = float(self._sched.deferred)
-        m["sched_forced"] = float(self._sched.forced)
+            setattr(m, f"ttft_ticks_p{q}", _pct(self._ttft_ticks_all, q))
+            setattr(m, f"itl_ticks_p{q}", _pct(self._itl_ticks_all, q))
+        m.ttft_s_p50 = _pct(self._ttft_s_all, 50)
+        m.ttft_s_p99 = _pct(self._ttft_s_all, 99)
+        m.sched_admitted = float(self._sched.admitted)
+        m.sched_deferred = float(self._sched.deferred)
+        m.sched_forced = float(self._sched.forced)
         vt_total = self._vt_prefill + self._vt_decode
         if vt_total > 0:
-            m["prefill_tick_share"] = self._vt_prefill / vt_total
-            m["decode_tick_share"] = self._vt_decode / vt_total
+            m.prefill_tick_share = self._vt_prefill / vt_total
+            m.decode_tick_share = self._vt_decode / vt_total
+        if self._prefix is not None:
+            m.prefix_evicted_blocks = float(self._prefix.evicted)
+            m.prefix_cache_blocks = float(len(self._prefix))
+        if m.prefix_lookups > 0:
+            m.prefix_hit_rate = m.prefix_hits / m.prefix_lookups
+        if m.prefill_ticks_nocache > 0:
+            m.prefill_ticks_saved_frac = (
+                m.prefill_ticks_saved / m.prefill_ticks_nocache)
         return m
 
     def _account_kv_bytes(self) -> None:
@@ -939,24 +1197,21 @@ class Server:
             pool_blocks=self._pool_usable if self._paged else None,
             block_size=self.sc.kv_block_size if self._paged else 0,
         )
-        self.metrics["kv_bytes_reserved"] = float(res["paged"])
-        self.metrics["kv_bytes_reserved_contiguous"] = float(
-            res["contiguous"])
-        self.metrics["kv_bytes_saved_frac"] = float(res["saved_frac"])
-        generated = self.metrics["decode_tokens"] + self.metrics["admitted"]
+        m = self.metrics
+        m.kv_bytes_reserved = float(res["paged"])
+        m.kv_bytes_reserved_contiguous = float(res["contiguous"])
+        m.kv_bytes_saved_frac = float(res["saved_frac"])
+        generated = m.decode_tokens + m.admitted
         if generated:
-            self.metrics["kv_reserved_bytes_per_token"] = (
-                float(res["paged"]) / generated)
+            m.kv_reserved_bytes_per_token = float(res["paged"]) / generated
         if self._pool_usable:
-            self.metrics["kv_pool_peak_occupancy"] = (
-                self.metrics["kv_blocks_peak_in_use"] / self._pool_usable)
+            m.kv_pool_peak_occupancy = (
+                m.kv_blocks_peak_in_use / self._pool_usable)
         if self._frag_ticks:
-            self.metrics["kv_internal_frag"] = (
-                self._frag_sum / self._frag_ticks)
-        if self.metrics["ticks"]:
-            self.metrics["kv_pool_mean_occupancy"] = (
-                self._occ_sum / self.metrics["ticks"])
-        self.metrics["prefill_traces"] = float(self.prefill_trace_count())
+            m.kv_internal_frag = self._frag_sum / self._frag_ticks
+        if m.ticks:
+            m.kv_pool_mean_occupancy = self._occ_sum / m.ticks
+        m.prefill_traces = float(self.prefill_trace_count())
         self._account_attn_bytes(row_b)
 
     def _account_attn_bytes(self, row_bytes: int) -> None:
@@ -967,8 +1222,9 @@ class Server:
         when the paged kernel actually served the ticks; the skip
         fraction is reported either way (it is what the kernel would
         skip, a property of the lengths/tables alone)."""
-        self.metrics["attn_blocks_fetched"] = float(self._attn_fetched)
-        self.metrics["attn_blocks_total"] = float(self._attn_total)
+        m = self.metrics
+        m.attn_blocks_fetched = float(self._attn_fetched)
+        m.attn_blocks_total = float(self._attn_total)
         if not self._attn_total:
             return
         by = cost_model.decode_attn_hbm_bytes(
@@ -976,14 +1232,13 @@ class Server:
             blocks_total=self._attn_total,
             block_size=self.sc.kv_block_size, row_bytes=row_bytes,
         )
-        self.metrics["attn_block_skip_fraction"] = (
+        m.attn_block_skip_fraction = (
             1.0 - self._attn_fetched / self._attn_total)
-        self.metrics["attn_bytes_gather"] = float(by["gather"])
-        self.metrics["attn_bytes_paged"] = float(by["paged"])
-        self.metrics["attn_bytes_saved_frac"] = float(by["saved_frac"])
+        m.attn_bytes_gather = float(by["gather"])
+        m.attn_bytes_paged = float(by["paged"])
+        m.attn_bytes_saved_frac = float(by["saved_frac"])
         if self.sc.attn_kernel == "paged":
-            self.metrics["modeled_attn_bytes_saved"] = float(
-                by["gather"] - by["paged"])
+            m.modeled_attn_bytes_saved = float(by["gather"] - by["paged"])
 
     def _account_modeled_bytes(self) -> None:
         """Explainability metric: HBM bytes the fused MLP megakernel saves
@@ -998,13 +1253,13 @@ class Server:
             return
         by = cost_model.mlp_hbm_bytes(
             self.sc.batch_slots, cfg.d_model, cfg.d_ff, cfg.d_model,
-            block_sparsity=self.metrics["mlp_skip_fraction"],
+            block_sparsity=self.metrics.mlp_skip_fraction,
             dtype_bytes=2 if cfg.dtype == "bfloat16" else 4,
             block_m=sp.block_m,
         )
-        self.metrics["modeled_hbm_bytes_saved"] = float(
+        self.metrics.modeled_hbm_bytes_saved = float(
             (by["two_kernel"] - by["fused"])
-            * cfg.num_layers * self.metrics["ticks"]
+            * cfg.num_layers * self.metrics.ticks
         )
 
 
@@ -1250,7 +1505,7 @@ class AsyncServer:
         self.shutdown(drain=exc_type is None)
 
     @property
-    def metrics(self) -> Dict[str, float]:
+    def metrics(self) -> ServeMetrics:
         return self._srv.metrics
 
     @property

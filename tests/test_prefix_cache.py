@@ -1,0 +1,371 @@
+"""Prefix-cache block sharing: refcount ledger, index, engine parity.
+
+The contract extends the paper's losslessness claim to CROSS-REQUEST
+reuse: mapping another request's cached prompt blocks read-only into a
+new slot (and prefilling only the divergent suffix) must change NOTHING
+observable -- token streams and decode-phase SparCE skip accounting stay
+bit-identical to the cache-off engine -- while the hit metrics show real
+prefill work kept off the virtual clock. The allocator's refcount ledger
+is the safety layer underneath: a lost or double-counted reference would
+either free a block a live slot still reads or leak the pool dry.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import TickCosts
+from repro.core.sparse_ops import SparsityConfig
+from repro.models import model as model_lib
+from repro.runtime.paging import BlockAllocator, PrefixCache
+from repro.runtime.scheduler import Scheduler, SLOConfig
+from repro.runtime.server import Request, ServeConfig, Server
+from serving_harness import oracle_rollout, run_and_check
+
+
+def _setup(arch="smollm-135m", relu=False):
+    cfg = get_config(arch).reduced()
+    if relu:
+        cfg = dataclasses.replace(cfg, mlp_act="relu")
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _paged(max_len=64, block=8, prefix=True, **kw):
+    return ServeConfig(max_len=max_len, kv_block_size=block,
+                       prefix_cache=prefix, **kw)
+
+
+def _shared_traffic(cfg, *, n_prefixes=2, prefix_len=16, n_requests=6,
+                    tail=(1, 6), max_new=(2, 6), seed=0):
+    """Seeded traffic where request i reuses prefix ``i % n_prefixes``:
+    the first visit of each prefix misses and registers, every revisit
+    should hit the index."""
+    rng = np.random.default_rng(seed)
+    codes = cfg.frontend == "codes"
+
+    def toks(n):
+        shape = (cfg.num_codebooks, n) if codes else (n,)
+        return rng.integers(0, cfg.vocab_size, shape)
+
+    prefixes = [toks(prefix_len) for _ in range(n_prefixes)]
+    reqs = []
+    for i in range(n_requests):
+        prompt = np.concatenate(
+            [prefixes[i % n_prefixes],
+             toks(int(rng.integers(tail[0], tail[1] + 1)))], axis=-1)
+        reqs.append(Request(uid=i, prompt=prompt,
+                            max_new=int(rng.integers(max_new[0],
+                                                     max_new[1] + 1))))
+    return reqs
+
+
+# ------------------------------------------------------ refcount ledger
+def test_refcount_retain_release_invariants():
+    a = BlockAllocator(6)
+    got = a.alloc(2)
+    assert [a.refcount(b) for b in got] == [1, 1]
+    a.retain(got)  # second holder on both
+    a.release(got)  # first holder lets go: blocks stay allocated
+    assert a.in_use == 2 and a.available == 4
+    a.release([got[0]])  # last holder: back to the free list
+    assert a.in_use == 1 and a.refcount(got[0]) == 0
+    with pytest.raises(RuntimeError, match="double-free"):
+        a.release([got[0]])
+    with pytest.raises(RuntimeError, match="retain of unallocated"):
+        a.retain([got[0]])
+    a.release([got[1]])
+    a.check()
+    assert a.available == 6
+
+
+def test_free_keeps_single_holder_semantics():
+    """``free`` is ``release`` spelled the pre-refcount way: one alloc,
+    one free, and a second free raises -- the exact PR 3 contract every
+    old call site still relies on."""
+    a = BlockAllocator(3)
+    got = a.alloc(3)
+    a.free(got)
+    assert a.available == 3
+    with pytest.raises(RuntimeError, match="double-free"):
+        a.free([got[0]])
+
+
+def test_fork_preserves_ledger_and_rolls_back():
+    a = BlockAllocator(4)
+    (shared,) = a.alloc(1)
+    a.retain([shared])  # two holders, as after one lookup
+    new = a.fork(shared)
+    assert new != shared
+    # Original survives for its other holder; the fork is private.
+    assert a.refcount(shared) == 1 and a.refcount(new) == 1
+    assert a.in_use == 2
+    # Forking a block nobody holds must not leak the fresh block.
+    free_before = a.available
+    with pytest.raises(RuntimeError, match="double-free"):
+        a.fork(99)
+    assert a.available == free_before
+    a.check()
+    # Reserved forks draw the commitment down like any reserved alloc.
+    assert a.try_reserve(1)
+    forked = a.fork(new, reserved=True)
+    assert a.reserved == 0
+    a.release([shared, forked])
+    a.check(expect_reserved=0)
+    assert a.available == 4
+
+
+def test_check_flags_commitment_ledger_mismatch():
+    a = BlockAllocator(4)
+    assert a.try_reserve(2)
+    a.check(expect_reserved=2)
+    with pytest.raises(AssertionError, match="commitment ledger"):
+        a.check(expect_reserved=1)
+
+
+@pytest.mark.slow
+def test_random_retain_release_fork_never_leaks():
+    """Hypothesis: any interleaving of alloc/retain/release/fork keeps
+    the refcount ledger in sync with the allocated set, and dropping
+    every holder at the end returns the whole pool."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 5)),
+                    max_size=60))
+    def run(ops):
+        a = BlockAllocator(10)
+        held = []  # one entry per outstanding reference
+        for op, n in ops:
+            if op == 0 and n <= a.available:
+                held.extend(a.alloc(n))
+            elif op == 1 and held:
+                b = held[n % len(held)]
+                a.retain([b])
+                held.append(b)
+            elif op == 2 and held:
+                a.release([held.pop(n % len(held))])
+            elif op == 3 and held and a.available >= 1:
+                i = n % len(held)
+                held[i] = a.fork(held[i])
+            a.check()
+            for b in set(held):
+                assert a.refcount(b) == held.count(b)
+        a.release(held)
+        a.check()
+        assert a.available == 10, "leaked blocks"
+
+    run()
+
+
+# --------------------------------------------------------- prefix index
+def test_chain_keys_cover_whole_prefix_not_just_chunks():
+    p = np.arange(32)
+    keys = PrefixCache.chain_keys(p, 8)
+    assert len(keys) == 4  # whole blocks only
+    assert PrefixCache.chain_keys(p[:19], 8) == keys[:2]  # tail excluded
+    # Same chunk content after a DIFFERENT first block: chained key
+    # differs (equal keys imply equal full prefixes).
+    q = p.copy()
+    q[0] += 1
+    assert PrefixCache.chain_keys(q, 8)[1] != keys[1]
+    # Codebook prompts hash every stream: one code differing in one
+    # chunk diverges from there on.
+    k2 = np.stack([np.arange(16), np.arange(16)])
+    k3 = k2.copy()
+    k3[1, 12] += 1
+    a, b = (PrefixCache.chain_keys(x, 8) for x in (k2, k3))
+    assert a[0] == b[0] and a[1] != b[1]
+
+
+def test_lookup_retains_and_register_keeps_existing_block():
+    a = BlockAllocator(8)
+    pc = PrefixCache(a, 4)
+    keys = PrefixCache.chain_keys(np.arange(12), 4)
+    blocks = a.alloc(3)
+    assert pc.register(keys, blocks) == 3
+    assert len(pc) == 3 and all(a.refcount(b) == 2 for b in blocks)
+    # Longest-prefix semantics: a miss at key i stops the walk.
+    hit = pc.lookup(keys[:2] + [b"nope"])
+    assert hit == blocks[:2]
+    assert [a.refcount(b) for b in blocks] == [3, 3, 2]
+    # A CoW copy re-registering an existing key must NOT displace the
+    # shared original (the copy stays slot-private).
+    (private,) = a.alloc(1)
+    assert pc.register(keys[:1], [private]) == 0
+    assert pc.lookup(keys[:1]) == blocks[:1]
+    a.release(hit + blocks[:1] + [private])
+    a.check()
+
+
+def test_evict_for_skips_blocks_a_live_slot_shares():
+    a = BlockAllocator(4)
+    pc = PrefixCache(a, 4)
+    keys = PrefixCache.chain_keys(np.arange(16), 4)
+    blocks = a.alloc(4)
+    pc.register(keys, blocks)
+    a.release(blocks)  # index is now the sole holder of all four
+    shared = pc.lookup(keys[:1])  # a "slot" shares the first block
+    assert not a.can_reserve(2)
+    freed = pc.evict_for(2)
+    # LRU would evict blocks[0] first, but the slot's reference
+    # protects it; the next entries go instead.
+    assert freed == 2 and a.can_reserve(2)
+    assert pc.lookup(keys[:1]) == shared  # survivor still indexed
+    assert a.refcount(blocks[0]) == 3
+    assert pc.evicted == 2
+
+
+# ----------------------------------------------------- config validation
+def test_serve_config_rejects_bad_values_with_actionable_messages():
+    for kw, msg in [
+        (dict(batch_slots=0), "batch_slots must be >= 1"),
+        (dict(max_len=0), "max_len must be >= 1"),
+        (dict(kv_block_size=-1), "kv_block_size must be >= 0"),
+        (dict(kv_block_size=8, kv_pool_blocks=0),
+         "kv_pool_blocks must be >= 1"),
+        (dict(attn_kernel="fancy"), "attn_kernel must be"),
+        (dict(attn_kernel="paged", kv_block_size=0),
+         "needs the paged KV layout"),
+        (dict(prefix_cache=True, kv_block_size=0),
+         "prefix_cache=True needs the paged KV layout"),
+    ]:
+        with pytest.raises(ValueError, match=msg):
+            ServeConfig(**kw)
+
+
+def test_slo_config_rejects_unmeetable_budgets():
+    for kw, msg in [
+        (dict(target_ttft_ticks=0.0), "target_ttft_ticks must be > 0"),
+        (dict(target_itl_ticks=0.5), "target_itl_ticks must be >= 1.0"),
+        (dict(admit_headroom=0.0), "admit_headroom must be > 0"),
+    ]:
+        with pytest.raises(ValueError, match=msg):
+            SLOConfig(**kw)
+
+
+def test_prefix_cache_rejects_incompatible_families():
+    """Family-coupled checks run in Server.__init__ (they are value
+    checks, so no params are ever touched): ssm/hybrid have no paged
+    rows to share, moe is not bucketable, patch frontends prepend
+    per-request rows no other prompt can reuse."""
+    sc = ServeConfig(max_len=32, kv_block_size=8, prefix_cache=True)
+    for arch, msg in [
+        ("mamba2-2.7b", "needs the paged KV layout"),
+        ("qwen2-moe-a2.7b", "not supported for family 'moe'"),
+        ("pixtral-12b", "not supported for family 'vlm'"),
+    ]:
+        with pytest.raises(ValueError, match=msg):
+            Server(get_config(arch).reduced(), None, sc)
+
+
+# ------------------------------------------------- cache-aware admission
+def test_scheduler_admits_on_suffix_price_not_full_prompt_price():
+    """The engine prices a hit admission at the SUFFIX bucket's prefill
+    cost. Same queue state, same SLO: the full-prompt price blows the
+    ITL budget and defers, the suffix price fits and admits -- cache
+    awareness falls out of pricing the work that actually runs."""
+    costs = TickCosts(decode_tick_s=1e-4, n_params=10**9, dtype_bytes=2)
+    pt_full = costs.prefill_ticks(1024)
+    pt_suffix = costs.prefill_ticks(64)
+    assert pt_suffix < pt_full
+    slo = SLOConfig(target_ttft_ticks=1e6,
+                    target_itl_ticks=1.0 + pt_suffix + 0.5)
+    sched = Scheduler(costs, slo)
+    sched.begin_round()
+    assert not sched.admit_head(wait_ticks=0.0, prefill_ticks=pt_full,
+                                n_active=2)
+    assert sched.admit_head(wait_ticks=0.0, prefill_ticks=pt_suffix,
+                            n_active=2)
+    assert sched.deferred == 1 and sched.admitted == 1
+
+
+# --------------------------------------------------------- engine parity
+def test_engine_tokens_and_decode_skips_identical_cache_on_off():
+    """Seeded shared-prefix traffic with SparCE sparsity live, run with
+    the cache off and on: token streams match the oracle AND each other,
+    and the DECODE-phase tile-skip slice is equal (suffix-only prefill
+    legitimately runs fewer prefill GEMMs, so the prefill slice is
+    excluded from parity -- that difference IS the saving)."""
+    cfg, params = _setup(relu=True)
+    sp = SparsityConfig(enabled=True, mode="reference", block_m=1,
+                        block_k=128)
+    reqs = _shared_traffic(cfg, n_prefixes=2, prefix_len=16,
+                           n_requests=6, seed=3)
+    done_off, m_off, _ = run_and_check(
+        cfg, params, _paged(batch_slots=3, prefix=False, sparsity=sp),
+        list(reqs))
+    done_on, m_on, _ = run_and_check(
+        cfg, params, _paged(batch_slots=3, prefix=True, sparsity=sp),
+        list(reqs))
+    out_off = {r.uid: r for r in done_off}
+    for r in done_on:
+        np.testing.assert_array_equal(r.out, out_off[r.uid].out)
+    # Decode-slice skip parity: total minus prefill slice.
+    for total, pre in (("skipped_tile_dots", "prefill_skipped_tile_dots"),
+                       ("total_tile_dots", "prefill_total_tile_dots")):
+        assert (getattr(m_on, total) - getattr(m_on, pre)
+                == getattr(m_off, total) - getattr(m_off, pre))
+    assert m_on.decode_tokens == m_off.decode_tokens
+    # The hits were real: 2 distinct prefixes over 6 requests.
+    assert m_on.prefix_cache_enabled == 1.0
+    assert m_on.prefix_lookups == 6 and m_on.prefix_hits == 4
+    assert m_on.prefix_matched_tokens == 4 * 16
+    assert m_on.prefix_blocks_shared == 4 * 2
+    assert m_on.prefill_tokens < m_off.prefill_tokens
+    assert m_off.prefix_hits == 0 and m_off.prefix_cache_enabled == 0.0
+
+
+def test_cow_forks_on_full_prompt_match_and_stays_exact():
+    """A byte-identical re-prompt whose length is a whole number of
+    blocks: every block is cached, so the engine forks the last block
+    (CoW), re-runs only the final token, and must still match the
+    oracle. The fork must not displace the shared original."""
+    cfg, params = _setup()
+    prompt = np.arange(16) % cfg.vocab_size
+    reqs = [Request(uid=0, prompt=prompt.copy(), max_new=4),
+            Request(uid=1, prompt=prompt.copy(), max_new=6)]
+    done, m, srv = run_and_check(
+        cfg, params, _paged(batch_slots=2), reqs)
+    out = {r.uid: np.asarray(r.out) for r in done}
+    np.testing.assert_array_equal(out[0], out[1][:4])  # same greedy path
+    assert m.prefix_cow_forks == 1
+    assert m.prefix_hits == 1
+    assert m.prefix_matched_tokens == 15  # last token re-runs for logits
+    # Both prompts' full blocks hash to the same keys: the index holds
+    # exactly one copy (the CoW fork stayed private).
+    assert len(srv._prefix) == 2
+
+
+def test_eos_midstream_release_keeps_sharers_exact():
+    """Sharers finishing at different times (instant max_new=1, an EOS
+    stop mid-stream, a full budget) release their shared references
+    while neighbours still read the same blocks -- outputs must stay
+    oracle-exact and the pool must drain back to index-only holders."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, cfg.vocab_size, 16)
+    tails = [rng.integers(0, cfg.vocab_size, n) for n in (3, 5, 2)]
+    prompts = [np.concatenate([prefix, t]) for t in tails]
+    # Give the middle sharer an eos_id equal to its own second greedy
+    # token, so it provably stops mid-stream with budget left.
+    ref = oracle_rollout(params, cfg, prompts[1], 6)
+    reqs = [
+        Request(uid=0, prompt=prompts[0], max_new=1),
+        Request(uid=1, prompt=prompts[1], max_new=6, eos_id=int(ref[1])),
+        Request(uid=2, prompt=prompts[2], max_new=6),
+    ]
+    done, m, srv = run_and_check(
+        cfg, params, _paged(batch_slots=3), reqs)
+    assert {r.uid: len(r.out) for r in done} == {0: 1, 1: 2, 2: 6}
+    assert m.prefix_hits == 2  # both revisits of the shared prefix
+    # Every slot released: only the index still holds blocks, no
+    # commitment is outstanding, and the ledger checks out.
+    st = srv._st
+    assert all(s is None for s in st.slots)
+    assert st.alloc.reserved == 0
+    assert st.alloc.in_use == len(srv._prefix)
+    st.alloc.check(expect_reserved=0)
