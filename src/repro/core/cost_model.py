@@ -221,6 +221,58 @@ def mlp_hbm_bytes(
     }
 
 
+def glu_mlp_hbm_bytes(
+    m: int, k: int, f: int, n: int, *, block_sparsity: float,
+    dtype_bytes: int = 4, block_m: int = 64,
+) -> dict:
+    """Modeled HBM traffic of one 3-matrix GLU MLP
+    y = (act(x @ w_gate) * (x @ w_in)) @ w_out.
+
+    Per variant (bytes, per forward call):
+
+      * ``dense``   -- unfused XLA: x, w_gate, w_in in; the gated
+        intermediate makes one HBM round trip (XLA fuses act+mul into
+        its producer, so g/h/a collapse to a single materialization);
+        w_out streamed per row-tile sweep; y out.
+      * ``unfused`` -- the pre-fused SparCE pipeline: g, h and a each
+        round-trip once (gate GEMM writes g, the threshold/bitmap pass
+        reads g and writes a's gate factor, the up GEMM writes h, the
+        mul reads both and writes a, the gated down GEMM reads a) --
+        SIX round trips of the (m, f) intermediate; compute skip only.
+      * ``fused``   -- the gated-GLU megakernel: no intermediate HBM
+        traffic at all, and a dead tile skips BOTH weight streams --
+        its w_in stripe and its w_out stripe DMAs are never issued, so
+        both scale with (1 - block_sparsity). The kernel re-DMAs live
+        w_in/w_out stripes per row-tile sweep (worst case, no
+        cross-row-tile reuse), so nm multiplies both gated streams;
+        x and the always-streamed gate weights are counted once.
+
+    ``block_sparsity`` is the (measured or expected) fraction of dead
+    (block_m, block_f) gate tiles.
+    """
+    s = min(max(float(block_sparsity), 0.0), 1.0)
+    nm = -(-m // block_m)
+    x_b = m * k * dtype_bytes
+    wgate_b = k * f * dtype_bytes
+    win_b = k * f * dtype_bytes
+    win_sweep_b = nm * k * f * dtype_bytes
+    wout_sweep_b = nm * f * n * dtype_bytes
+    inter_b = m * f * dtype_bytes
+    y_b = m * n * dtype_bytes
+    dense = x_b + wgate_b + win_b + 2 * inter_b + wout_sweep_b + y_b
+    unfused = x_b + wgate_b + win_b + 6 * inter_b + wout_sweep_b + y_b
+    fused = (
+        x_b + wgate_b + (win_sweep_b + wout_sweep_b) * (1.0 - s) + y_b
+    )
+    return {
+        "dense": int(dense),
+        "unfused": int(unfused),
+        "fused": int(round(fused)),
+        "fused_saved_frac_vs_unfused": 1.0 - fused / unfused,
+        "intermediate_bytes": int(inter_b),
+    }
+
+
 def model_flops(n_params_active: int, tokens: int) -> float:
     """MODEL_FLOPS = 6 * N_active * D (training); 2*N*D for inference."""
     return 6.0 * n_params_active * tokens

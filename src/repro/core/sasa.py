@@ -295,7 +295,7 @@ def plan_cache_clear() -> None:
 class MlpPlan:
     """Skip schedule for one MLP y = act(x[M,K] @ w_in[K,F]) @ w_out[F,N]."""
 
-    variant: str  # 'fused' | 'two_kernel' | 'dense'
+    variant: str  # 'fused' | 'two_kernel' (GLU: 'unfused') | 'dense'
     block_m: int
     block_f: int  # bitmap granularity over the intermediate's F dim
     block_n: int  # down-projection n-tile (two-kernel path only)
@@ -419,6 +419,135 @@ def plan_mlp_cached(
     if plan is None:
         _PLAN_CACHE_STATS["misses"] += 1
         plan = plan_mlp(
+            m, k, f, n, measured_block_sparsity=s, dtype=dtype,
+            block_m=block_m, block_f=block_f, block_n=block_n,
+            min_expected_block_sparsity=min_expected_block_sparsity,
+        )
+        _PLAN_CACHE[key] = plan
+    else:
+        _PLAN_CACHE_STATS["hits"] += 1
+    return plan
+
+
+def _glu_fused_vmem_bytes(bm: int, bf: int, k: int, n: int,
+                          itemsize: int) -> int:
+    """Working set of the gated-GLU megakernel: x tile + w_gate tile (x2
+    pipeline buffers each), 2 act(g) tiles (f32), 2 manually-DMA'd w_in
+    stripes, 2 w_out stripes, f32 accumulator, y tile."""
+    return (
+        2 * bm * k * itemsize
+        + 2 * k * bf * itemsize
+        + 2 * bm * bf * 4
+        + 2 * k * bf * itemsize
+        + 2 * bf * n * itemsize
+        + bm * n * 4
+        + bm * n * itemsize
+    )
+
+
+def plan_glu_mlp(
+    m: int,
+    k: int,
+    f: int,
+    n: int,
+    *,
+    measured_block_sparsity: float = 0.0,
+    dtype: str = "float32",
+    block_m: Optional[int] = None,
+    block_f: Optional[int] = None,
+    block_n: Optional[int] = None,
+    min_expected_block_sparsity: float = 0.02,
+) -> MlpPlan:
+    """Choose tiling + variant for one GLU MLP
+    y = (act(x @ w_gate) * (x @ w_in)) @ w_out.
+
+    Same shape as :func:`plan_mlp` but scored by the 3-matrix byte model
+    (core.cost_model.glu_mlp_hbm_bytes) and constrained by the gated-GLU
+    kernel's bigger VMEM working set (two weight-stripe buffers).
+    Variants: 'fused' (megakernel, two-sided fetch skip), 'unfused'
+    (gate-thresholded pipeline, compute skip only), 'dense'. Unlike the
+    plain MLP, fused is NOT a free win at zero sparsity: its per-row-tile
+    w_in stripe DMAs re-stream k*f bytes nm times, so at low measured
+    sparsity and many row-tiles the planner honestly prefers the
+    fallback -- ``modeled_bytes`` records why.
+    """
+    from repro.core import cost_model
+
+    sub = _SUBLANE.get(dtype, 8)
+    itemsize = 2 if dtype == "bfloat16" else 4
+    s = min(max(float(measured_block_sparsity), 0.0), 1.0)
+
+    bm_menu = [block_m] if block_m else [
+        b for b in (sub, 2 * sub, 4 * sub, 8 * sub, 256) if b <= max(m, sub)
+    ]
+    bf_menu = [block_f] if block_f else [
+        b for b in (128, 256, 512) if b <= max(f, 128)
+    ]
+    bn = block_n or _round_block(n, 256, _MXU_LANE)
+
+    best = None  # (bytes, -tile_area, bm, bf) -> prefer bigger tiles on tie
+    for bm in bm_menu:
+        for bf in bf_menu:
+            if _glu_fused_vmem_bytes(bm, bf, k, n, itemsize) > _VMEM_BUDGET_BYTES:
+                continue
+            by = cost_model.glu_mlp_hbm_bytes(
+                m, k, f, n, block_sparsity=s, dtype_bytes=itemsize,
+                block_m=bm,
+            )["fused"]
+            cand = (by, -(bm * bf), bm, bf)
+            if best is None or cand < best:
+                best = cand
+    fused_ok = best is not None
+    if fused_ok:
+        _, _, bm, bf = best
+    else:
+        bm = block_m or _round_block(m, 64, sub)
+        bf = block_f or 128
+
+    by = cost_model.glu_mlp_hbm_bytes(
+        m, k, f, n, block_sparsity=s, dtype_bytes=itemsize, block_m=bm
+    )
+    if fused_ok and by["fused"] <= by["unfused"]:
+        variant = "fused"
+    elif s >= min_expected_block_sparsity:
+        variant = "unfused"
+    else:
+        # No sparsity to exploit and the megakernel doesn't fit/win:
+        # the 6-round-trip unfused pipeline would be pure overhead.
+        variant = "dense"
+    return MlpPlan(
+        variant=variant,
+        block_m=bm,
+        block_f=bf,
+        block_n=bn,
+        expected_block_sparsity=s,
+        modeled_bytes=tuple(
+            (kk, vv) for kk, vv in by.items() if isinstance(vv, int)
+        ),
+    )
+
+
+def plan_glu_mlp_cached(
+    m: int,
+    k: int,
+    f: int,
+    n: int,
+    *,
+    measured_block_sparsity: float = 0.0,
+    dtype: str = "float32",
+    block_m: Optional[int] = None,
+    block_f: Optional[int] = None,
+    block_n: Optional[int] = None,
+    min_expected_block_sparsity: float = 0.02,
+) -> MlpPlan:
+    """Memoised :func:`plan_glu_mlp`; bucketed like plan_mlp_cached."""
+    s = _bucket_sparsity(measured_block_sparsity)
+    key = ("glu_mlp", m, k, f, n, dtype, s, block_m, block_f, block_n,
+           min_expected_block_sparsity)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        _PLAN_CACHE_STATS["misses"] += 1
+        plan = plan_glu_mlp(
             m, k, f, n, measured_block_sparsity=s, dtype=dtype,
             block_m=block_m, block_f=block_f, block_n=block_n,
             min_expected_block_sparsity=min_expected_block_sparsity,

@@ -51,6 +51,27 @@ class SparsityConfig:
     # EMA crosses a bucket edge), and whether the engine may do so.
     expected_sparsity: float = 0.0
     autotune: bool = False
+    # Gated-GLU (silu/gelu) near-zero threshold: a gate tile with every
+    # |act(g)| <= gate_threshold is dead -- its up-projection is never
+    # computed and its w_in/w_out stripes are never fetched. 0.0 is the
+    # exact all-zero test (lossless; dead serving slots still skip);
+    # calibrated small values trade bounded output error for skips on
+    # smooth activations. Ignored by relu-family (2-matrix) MLPs.
+    gate_threshold: float = 0.0
+
+    def __post_init__(self):
+        if self.gate_threshold < 0.0:
+            raise ValueError(
+                f"gate_threshold must be >= 0, got {self.gate_threshold}"
+            )
+        # Snap expected_sparsity to the SparsityEMA bucket grid at
+        # validation time: the serving engine's replan check compares the
+        # EMA's 1/8-bucketed measurement against this field, so an
+        # off-grid config value (e.g. 0.3) could never compare equal and
+        # always forced one needless re-jit on startup.
+        v = min(max(float(self.expected_sparsity), 0.0), 1.0)
+        snapped = round(v * sasa.SparsityEMA.BUCKETS) / sasa.SparsityEMA.BUCKETS
+        object.__setattr__(self, "expected_sparsity", snapped)
 
     def block(self) -> Tuple[int, int]:
         return (self.block_m, self.block_k)
@@ -281,6 +302,160 @@ def sparce_mlp(
     )
     y, bits = _sparce_mlp(x, w_in, w_out, plan, act, cfg.interpret)
     return y, bits, plan
+
+
+# --------------------------------------------------------- gated-GLU MLP
+# The GLU megakernel path: one Pallas kernel computes
+# (act(x @ w_gate) * (x @ w_in)) @ w_out with the dead-tile bitmap
+# emitted at the GATE's writeback (SparseNN's predicted-output-sparsity
+# gating), so a dead tile's up-projection is never computed and its
+# w_in/w_out stripe fetches are never issued -- two-sided skipping.
+# Backward runs the exact (undropped) reference GLU gradient, so the op
+# stays trainable at any threshold.
+
+def unfused_glu_mlp(x, w_gate, w_in, w_out, plan, act, tau,
+                    mode="kernel", interpret=True):
+    """The pre-fused GLU pipeline the planner falls back to: dense gate
+    + up GEMMs, threshold bitmap at the gate's writeback, bitmap-gated
+    down-projection (compute skip only; six HBM round trips of the
+    intermediate -- what the fused variant eliminates). Shared by the
+    fused-mode fallback and the benchmarks. Returns (y, bits)."""
+    from repro.kernels import ops as kops
+
+    g = jnp.dot(x, w_gate)
+    ga = kref.glu_act_ref(g, act)
+    bits = kref.gate_bitmap_ref(ga, (plan.block_m, plan.block_f), tau)
+    h = jnp.dot(x, w_in)
+    a = (ga.astype(jnp.float32) * h.astype(jnp.float32)).astype(x.dtype)
+    bmp = sprf.TileBitmap(
+        bits=bits, block=(plan.block_m, plan.block_f), shape=a.shape
+    )
+    gplan = sasa.bitmap_gated_plan(
+        x.shape[0], w_in.shape[1], w_out.shape[1],
+        block_m=plan.block_m, block_k=plan.block_f, block_n=plan.block_n,
+    )
+    if mode == "kernel":
+        y = kops.sparce_gemm(
+            a, w_out, gplan, lhs_bitmap=bmp, out_dtype=x.dtype,
+            interpret=interpret,
+        )
+    else:
+        y = kref.sparce_gemm_ref(
+            a, w_out, bits_lhs=bits, block_m=plan.block_m,
+            block_k=plan.block_f, block_n=plan.block_n, out_dtype=x.dtype,
+        )
+    return y, bits
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _sparce_glu_mlp(x, w_gate, w_in, w_out, plan, act, tau, interpret):
+    if plan.variant == "fused":
+        y, bmp = kops.sparce_glu_mlp_fused(
+            x, w_gate, w_in, w_out, block_m=plan.block_m,
+            block_f=plan.block_f, act=act, tau=tau, interpret=interpret,
+        )
+        return y, bmp.bits
+    if plan.variant == "unfused":
+        return unfused_glu_mlp(
+            x, w_gate, w_in, w_out, plan, act, tau, interpret=interpret
+        )
+    # dense fallback: plain GLU; the bitmap still rides along (report
+    # only -- the caller must not count it as realized skips).
+    g = jnp.dot(x, w_gate)
+    ga = kref.glu_act_ref(g, act)
+    bits = kref.gate_bitmap_ref(ga, (plan.block_m, plan.block_f), tau)
+    h = jnp.dot(x, w_in)
+    a = (ga.astype(jnp.float32) * h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.dot(a, w_out), bits
+
+
+def _glu_mlp_fwd_vjp(x, w_gate, w_in, w_out, plan, act, tau, interpret):
+    out = _sparce_glu_mlp(x, w_gate, w_in, w_out, plan, act, tau, interpret)
+    return out, (x, w_gate, w_in, w_out)
+
+
+def _glu_mlp_bwd_vjp(plan, act, tau, interpret, res, cts):
+    gy, _ = cts  # no cotangent flows into the int32 bitmap
+    x, w_gate, w_in, w_out = res
+    xf = x.astype(jnp.float32)
+    g = jnp.dot(xf, w_gate.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    h = jnp.dot(xf, w_in.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    # Reference backward: the exact GLU gradient, ignoring the forward's
+    # threshold drop (at tau=0 the dropped tiles are exactly zero so the
+    # gradients agree; at tau>0 this is the standard straight-through
+    # treatment of the approximation).
+    ga, act_vjp = jax.vjp(lambda t: kref.glu_act_ref(t, act), g)
+    gyf = gy.astype(jnp.float32)
+    da = jnp.dot(gyf, w_out.astype(jnp.float32).T)
+    dw_out = jnp.dot((ga * h).T, gyf).astype(w_out.dtype)
+    dh = da * ga
+    dg = act_vjp(da * h)[0]
+    dx = (jnp.dot(dh, w_in.astype(jnp.float32).T)
+          + jnp.dot(dg, w_gate.astype(jnp.float32).T)).astype(x.dtype)
+    dw_in = jnp.dot(xf.T, dh).astype(w_in.dtype)
+    dw_gate = jnp.dot(xf.T, dg).astype(w_gate.dtype)
+    return dx, dw_gate, dw_in, dw_out
+
+
+_sparce_glu_mlp.defvjp(_glu_mlp_fwd_vjp, _glu_mlp_bwd_vjp)
+
+
+def sparce_glu_mlp(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_in: jax.Array,
+    w_out: jax.Array,
+    act: str,
+    cfg: SparsityConfig,
+) -> Tuple[jax.Array, jax.Array, "sasa.MlpPlan"]:
+    """Gated-GLU MLP forward under the planner-v2 GLU plan.
+
+    Returns (y, bits, plan); as with :func:`sparce_mlp` the plan rides
+    along so callers report honest skip accounting -- the 'dense'
+    variant computes every tile. cfg.block_m/block_k pin the gate-tile
+    geometry (block_k doubles as block_f over the intermediate, exactly
+    like the relu path), cfg.gate_threshold is the dead-tile test.
+    """
+    m, k = x.shape
+    _, f = w_in.shape
+    _, n = w_out.shape
+    plan = sasa.plan_glu_mlp_cached(
+        m, k, f, n,
+        measured_block_sparsity=cfg.expected_sparsity,
+        dtype=str(x.dtype),
+        block_m=cfg.block_m, block_f=cfg.block_k, block_n=cfg.block_n,
+    )
+    y, bits = _sparce_glu_mlp(
+        x, w_gate, w_in, w_out, plan, act, float(cfg.gate_threshold),
+        cfg.interpret,
+    )
+    return y, bits, plan
+
+
+def glu_act_with_bitmap(
+    g: jax.Array, act: str, cfg: SparsityConfig
+) -> Tuple[jax.Array, Optional[sprf.TileBitmap]]:
+    """Gate activation (f32-upcast convention) + dead-tile bitmap.
+
+    The GLU analogue of :func:`relu_with_bitmap`: the bitmap is emitted
+    at the gate's writeback from ``|act(g)| <= cfg.gate_threshold``, on
+    the flattened-2D view the consuming matmul sees. Bit semantics are
+    identical to the fused megakernel's, so skip accounting matches
+    exactly across paths.
+    """
+    shape = g.shape
+    g2 = g.reshape(-1, shape[-1])
+    ga2 = kref.glu_act_ref(g2, act)
+    if not cfg.enabled or cfg.mode == "off" or not cfg.gate_activations:
+        return ga2.reshape(shape), None
+    bits = kref.gate_bitmap_ref(
+        ga2, (cfg.block_m, cfg.block_k), float(cfg.gate_threshold)
+    )
+    return ga2.reshape(shape), sprf.TileBitmap(
+        bits=bits, block=(cfg.block_m, cfg.block_k), shape=g2.shape
+    )
 
 
 def gemm_skip_stats(

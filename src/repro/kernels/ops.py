@@ -16,6 +16,7 @@ from repro.core.sprf import TileBitmap
 from repro.kernels import paged_decode_attn as _pda
 from repro.kernels import sparce_gemm as _sg
 from repro.kernels import relu_bitmap as _rb
+from repro.kernels import sparce_glu_mlp as _sgm
 from repro.kernels import sparce_mlp as _sm
 
 
@@ -142,6 +143,49 @@ def sparce_mlp_fused(
     y, bits = _sm.sparce_mlp_fused(
         xp, winp, woutp, block_m=block_m, block_f=block_f, act=act,
         out_dtype=out_dtype, interpret=interpret,
+    )
+    return y[:m, :n], TileBitmap(
+        bits=bits, block=(block_m, block_f), shape=(m, fdim)
+    )
+
+
+def sparce_glu_mlp_fused(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_in: jax.Array,
+    w_out: jax.Array,
+    *,
+    block_m: int,
+    block_f: int,
+    act: str = "silu",
+    tau: float = 0.0,
+    out_dtype=None,
+    interpret: bool = True,
+) -> tuple[jax.Array, TileBitmap]:
+    """Padded wrapper over the gated-GLU megakernel.
+
+    Returns (y[M, N], bitmap) where the bitmap covers the activated gate
+    act(x @ w_gate) at (block_m, block_f) granularity -- the same grid
+    the unfused gate-thresholding path produces, so skip accounting is
+    identical. Padding stripes see zero gate weights, act(0) == 0 and
+    ``|0| <= tau``, so their bits are 1 and their w_in/w_out stripes are
+    never fetched; padding rows can only vote "dead" and never flip a
+    real tile live.
+    """
+    m, k = x.shape
+    kg, fg = w_gate.shape
+    k2, fdim = w_in.shape
+    f2, n = w_out.shape
+    assert k == kg == k2 and fdim == fg == f2, (
+        x.shape, w_gate.shape, w_in.shape, w_out.shape)
+    pm, pf = _ceil_to(m, block_m), _ceil_to(fdim, block_f)
+    xp = _pad2(x, pm, k)
+    wgatep = _pad2(w_gate, k, pf)
+    winp = _pad2(w_in, k, pf)
+    woutp = _pad2(w_out, pf, n)
+    y, bits = _sgm.sparce_glu_mlp_fused(
+        xp, wgatep, winp, woutp, block_m=block_m, block_f=block_f,
+        act=act, tau=tau, out_dtype=out_dtype, interpret=interpret,
     )
     return y[:m, :n], TileBitmap(
         bits=bits, block=(block_m, block_f), shape=(m, fdim)

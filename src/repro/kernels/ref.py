@@ -91,6 +91,74 @@ def relu_bwd_bitmap_ref(
     return gx, bits
 
 
+def glu_act_ref(g: jax.Array, act: str) -> jax.Array:
+    """Canonical GLU gate activation: f32-upcast-then-cast-back.
+
+    This is the moe.py convention (``silu(g.astype(f32)).astype(dtype)``)
+    and the single definition every GLU path -- layers._activate, the
+    unfused sparse pipeline, the fused megakernel's contract and these
+    oracles -- shares, so low-precision writebacks round identically.
+    """
+    gf = g.astype(jnp.float32)
+    if act == "silu":
+        a = jax.nn.silu(gf)
+    elif act == "gelu":
+        a = jax.nn.gelu(gf)
+    elif act == "relu":
+        a = jnp.maximum(gf, 0.0)
+    elif act == "relu2":
+        r = jnp.maximum(gf, 0.0)
+        a = r * r
+    else:
+        raise ValueError(act)
+    return a.astype(g.dtype)
+
+
+def gate_bitmap_ref(
+    ga: jax.Array, block: Tuple[int, int], tau: float
+) -> jax.Array:
+    """Per-tile dead bitmap of an activated gate: 1 iff every ``|v| <= tau``.
+
+    ``<=`` (not ``<``) so ``tau=0`` is the exact all-zero test -- the
+    relu-gated case degenerates to ``relu_bitmap_ref``'s semantics.
+    Padding tiles are zero-filled and ``|0| <= tau`` always holds, so a
+    partial tile's bit is decided by its real values alone.
+    """
+    br, bc = block
+    gp = _pad2(ga, br, bc)
+    pr, pc = gp.shape
+    t = gp.reshape(pr // br, br, pc // bc, bc).astype(jnp.float32)
+    return jnp.all(jnp.abs(t) <= tau, axis=(1, 3)).astype(jnp.int32)
+
+
+def glu_mlp_ref(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_in: jax.Array,
+    w_out: jax.Array,
+    *,
+    act: str,
+    tau: float,
+    block_m: int,
+    block_f: int,
+    out_dtype=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the gated-GLU megakernel: gate-first, threshold at the
+    gate's writeback, dead tiles dropped from the intermediate, dense
+    down-projection in f32. Returns (y, bits)."""
+    g = jnp.dot(x, w_gate)
+    ga = glu_act_ref(g, act)
+    bits = gate_bitmap_ref(ga, (block_m, block_f), tau)
+    h = jnp.dot(x, w_in)
+    a = (ga.astype(jnp.float32) * h.astype(jnp.float32)).astype(x.dtype)
+    a = mask_tiles(a, bits, (block_m, block_f))
+    y = jnp.dot(
+        a.astype(jnp.float32), w_out.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(out_dtype or x.dtype), bits
+
+
 def decode_attn_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
     *, scale: float | None = None,

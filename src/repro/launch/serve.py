@@ -9,8 +9,15 @@
 
 --mixed draws per-request prompt lengths and decode budgets from a range
 (the continuous batcher's target workload); --sparce turns on the SparCE
-reference path for the serving MLPs and reports the realized tile-skip
-fraction.
+path for the serving MLPs and reports the realized tile-skip fraction.
+For relu-family archs --sparce swaps the MLP activation to relu (the
+paper's sparsity source). Gated-GLU archs (silu/gelu -- the DEFAULT
+config family) keep their activation when --sparce-gate-threshold is
+given: the gate activation's writeback emits a dead-tile bitmap
+(|act(g)| <= tau) that skips both the up-projection compute and the
+w_in/w_out stripe fetches. tau=0 is lossless (exact all-zero test; dead
+batch slots still produce real skips); small calibrated taus trade
+bounded output error for more skips.
 
 Live admission: --open-loop serves the workload through the
 ``AsyncServer`` facade instead of one batch ``generate`` call -- a
@@ -87,6 +94,12 @@ def main(argv=None):
     ap.add_argument("--sparce-autotune", action="store_true",
                     help="let the engine replan MLP tiling/variant from "
                          "the measured (EMA) block sparsity")
+    ap.add_argument("--sparce-gate-threshold", type=float, default=None,
+                    help="gated-GLU (silu/gelu) dead-tile threshold tau: "
+                         "keep the arch's GLU activation and skip gate "
+                         "tiles with every |act(g)| <= tau (0 = exact "
+                         "all-zero test, lossless). Implies --sparce. "
+                         "Ignored by relu-family archs.")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--kv-block-size", type=int, default=16,
                     help="rows per paged-KV pool block; 0 = contiguous "
@@ -144,16 +157,25 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     sparsity = None
-    if args.sparce:
-        # The paper's sparsity source is a ReLU-family MLP; swap the act
-        # BEFORE init (relu MLPs are 2-matrix, no w_gate).
+    sparce_on = args.sparce or args.sparce_gate_threshold is not None
+    if sparce_on:
         import dataclasses
-        cfg = dataclasses.replace(cfg, mlp_act="relu")
+        glu_arch = cfg.mlp_act in ("silu", "gelu")
+        if glu_arch and args.sparce_gate_threshold is not None:
+            # Gated-GLU path: KEEP the arch's activation; sparsity comes
+            # from thresholding the gate at its writeback instead of
+            # from relufication.
+            tau = args.sparce_gate_threshold
+        else:
+            # The paper's sparsity source is a ReLU-family MLP; swap the
+            # act BEFORE init (relu MLPs are 2-matrix, no w_gate).
+            cfg = dataclasses.replace(cfg, mlp_act="relu")
+            tau = 0.0
         # block_m=1: decode rows are slots, so per-row tiles make each
         # freed slot's GEMM work individually skippable.
         sparsity = SparsityConfig(
             enabled=True, mode=args.sparce_mode, block_m=1, block_k=128,
-            autotune=args.sparce_autotune,
+            autotune=args.sparce_autotune, gate_threshold=tau,
         )
     params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed))
     buckets = None

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sparse_ops, sprf
+from repro.kernels import ref as kref
 from repro.models import modules as nn
 
 
@@ -68,10 +69,12 @@ def _activate(
         return sparse_ops.relu_with_bitmap(h, scfg)
     if act == "relu2":
         return sparse_ops.relu2_with_bitmap(h, scfg)
-    if act == "silu":
-        return jax.nn.silu(h), None
-    if act == "gelu":
-        return jax.nn.gelu(h), None
+    if act in ("silu", "gelu"):
+        # f32-upcast-then-cast-back, the moe.py convention: computing a
+        # smooth activation directly in bf16 loses ulps vs upcasting
+        # first, and the fused GLU kernel / oracles are pinned to the
+        # upcast form -- one definition (kref.glu_act_ref) for all paths.
+        return kref.glu_act_ref(h, act), None
     raise ValueError(act)
 
 
@@ -109,12 +112,44 @@ def mlp_fwd(
         )
         stats = sparse_ops.gemm_skip_stats(bmp, n, scfg.block_n)
         return y.reshape(shape), stats
-    h = jnp.dot(x2, params["w_in"])
     if act in ("silu", "gelu"):
-        a, _ = _activate(h, act, scfg)
-        a = a * jnp.dot(x2, params["w_gate"])
-        y = jnp.dot(a, params["w_out"])
-        return y.reshape(shape), no_stats
+        # Gated-GLU: act(x @ w_gate) * (x @ w_in), gate computed FIRST.
+        # The gate's writeback is where the dead-tile bitmap is emitted
+        # (|act(g)| <= gate_threshold -- SparseNN-style predicted output
+        # sparsity), so the skip decision lands before the up-projection
+        # and down-projection consume it.
+        n = params["w_out"].shape[-1]
+        if scfg.enabled and scfg.mode == "fused" and scfg.gate_activations:
+            # Megakernel path: gate, threshold, gated up-proj and gated
+            # down-proj stripe fetches in ONE kernel; dead tiles fetch
+            # neither w_in nor w_out stripes. Bitmap geometry matches the
+            # reference path's (block_m, block_k) so accounting agrees.
+            y, bits, plan = sparse_ops.sparce_glu_mlp(
+                x2, params["w_gate"], params["w_in"], params["w_out"],
+                act, scfg,
+            )
+            if plan.variant == "dense":
+                # Fallback computes every tile: no realized skips.
+                return y.reshape(shape), no_stats
+            bmp = sprf.TileBitmap(
+                bits=bits, block=(scfg.block_m, scfg.block_k),
+                shape=(x2.shape[0], params["w_in"].shape[-1]),
+            )
+            stats = sparse_ops.gemm_skip_stats(bmp, n, scfg.block_n)
+            return y.reshape(shape), stats
+        g = jnp.dot(x2, params["w_gate"])
+        ga, bmp = sparse_ops.glu_act_with_bitmap(g, act, scfg)
+        a = ga * jnp.dot(x2, params["w_in"])
+        if scfg.enabled and bmp is not None:
+            y = sparse_ops.sparce_matmul(
+                a, params["w_out"], scfg, lhs_bitmap=bmp
+            )
+            stats = sparse_ops.gemm_skip_stats(bmp, n, scfg.block_n)
+        else:
+            y = jnp.dot(a, params["w_out"])
+            stats = no_stats
+        return y.reshape(shape), stats
+    h = jnp.dot(x2, params["w_in"])
     a, bmp = _activate(h, act, scfg)
     if scfg.enabled and bmp is not None and scfg.gate_activations:
         # plan=None + lhs bitmap: sparce_matmul pulls the memoised

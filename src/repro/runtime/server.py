@@ -1242,24 +1242,36 @@ class Server:
 
     def _account_modeled_bytes(self) -> None:
         """Explainability metric: HBM bytes the fused MLP megakernel saves
-        vs the two-kernel path at the REALIZED skip fraction, per the
+        vs the pre-fused pipeline at the REALIZED skip fraction, per the
         cost model, over all decode-tick MLPs served. (Prefill GEMMs run
-        at different M per prompt and are left out of the model.)"""
+        at different M per prompt and are left out of the model.)
+        relu-family MLPs compare fused vs two_kernel; gated-GLU
+        (silu/gelu) MLPs compare the GLU megakernel vs the unfused
+        3-GEMM pipeline."""
         sp, cfg = self.cfg.sparsity, self.cfg
         if (
             sp is None or not sp.enabled or cfg.family not in
-            ("dense", "vlm", "audio") or cfg.mlp_act not in ("relu", "relu2")
+            ("dense", "vlm", "audio")
+            or cfg.mlp_act not in ("relu", "relu2", "silu", "gelu")
         ):
             return
-        by = cost_model.mlp_hbm_bytes(
-            self.sc.batch_slots, cfg.d_model, cfg.d_ff, cfg.d_model,
-            block_sparsity=self.metrics.mlp_skip_fraction,
-            dtype_bytes=2 if cfg.dtype == "bfloat16" else 4,
-            block_m=sp.block_m,
-        )
+        dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
+        if cfg.mlp_act in ("silu", "gelu"):
+            by = cost_model.glu_mlp_hbm_bytes(
+                self.sc.batch_slots, cfg.d_model, cfg.d_ff, cfg.d_model,
+                block_sparsity=self.metrics.mlp_skip_fraction,
+                dtype_bytes=dtype_bytes, block_m=sp.block_m,
+            )
+            saved = by["unfused"] - by["fused"]
+        else:
+            by = cost_model.mlp_hbm_bytes(
+                self.sc.batch_slots, cfg.d_model, cfg.d_ff, cfg.d_model,
+                block_sparsity=self.metrics.mlp_skip_fraction,
+                dtype_bytes=dtype_bytes, block_m=sp.block_m,
+            )
+            saved = by["two_kernel"] - by["fused"]
         self.metrics.modeled_hbm_bytes_saved = float(
-            (by["two_kernel"] - by["fused"])
-            * cfg.num_layers * self.metrics.ticks
+            saved * cfg.num_layers * self.metrics.ticks
         )
 
 
